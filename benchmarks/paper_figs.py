@@ -1,0 +1,316 @@
+"""One benchmark per paper table/figure (DistSim, CF'23).
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``
+where ``us_per_call`` is the simulated batch time (µs) and ``derived``
+carries the figure's headline metric (error %, speedup, ratio).
+
+The "actual" side of every comparison is the discrete-event replay
+oracle with profiling jitter/straggler/clock noise (DESIGN.md §2 —
+we own no 16-GPU A40 cluster; the oracle reproduces the paper's error
+sources). Cluster constants follow the paper's testbed shape
+(A40_CLUSTER).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Strategy,
+                        activity_error, batch_time_error, grid_search,
+                        per_stage_error)
+
+Row = Tuple[str, float, str]
+
+PROVIDER = AnalyticalProvider(A40_CLUSTER)
+
+# strategies used across Fig. 3/8/9 ("xM xP xD", microbatches)
+_STRATS = [
+    ("1m1p4d", Strategy(mp=1, pp=1, dp=4, microbatches=1)),
+    ("1m2p2d", Strategy(mp=1, pp=2, dp=2, microbatches=4)),
+    ("2m2p1d", Strategy(mp=2, pp=2, dp=1, microbatches=4)),
+    ("1m2p4d", Strategy(mp=1, pp=2, dp=4, microbatches=4)),
+    ("2m2p2d", Strategy(mp=2, pp=2, dp=2, microbatches=4)),
+    ("2m2p4d", Strategy(mp=2, pp=2, dp=4, microbatches=4)),
+    ("2m4p2d", Strategy(mp=2, pp=4, dp=2, microbatches=8)),
+]
+_MODELS = ["bert_large", "gpt2_345m", "t5_large"]
+
+
+def fig8_batch_time() -> List[Row]:
+    """§5.2 / Fig. 8: iteration-time prediction error (<4% claimed)."""
+    rows = []
+    worst = 0.0
+    for model in _MODELS:
+        cfg = get_config(model)
+        for label, strat in _STRATS:
+            sim = DistSim(cfg, strat, global_batch=16, seq=512,
+                          provider=PROVIDER)
+            pred = sim.predict()
+            errs = []
+            for seed in range(5):
+                act = sim.replay(seed=seed, jitter_sigma=0.025)
+                errs.append(batch_time_error(pred.timeline, act.timeline))
+            err = float(np.mean(errs))
+            worst = max(worst, err)
+            rows.append((f"fig8/{model}/{label}",
+                         pred.batch_time * 1e6, f"err={err*100:.2f}%"))
+    rows.append(("fig8/max_error", 0.0,
+                 f"max={worst*100:.2f}% (paper: <4%)"))
+    return rows
+
+
+def fig9_device_activity() -> List[Row]:
+    """§5.3 / Fig. 9: per-GPU activity error (<5% claimed)."""
+    rows = []
+    worst = 0.0
+    for model in _MODELS:
+        cfg = get_config(model)
+        for label, strat in _STRATS[:5]:
+            sim = DistSim(cfg, strat, 16, 512, PROVIDER)
+            pred = sim.predict()
+            act = sim.replay(seed=1, jitter_sigma=0.025,
+                             clock_sigma=2e-5)
+            errs = activity_error(pred.timeline, act.timeline)
+            e = max(errs.values())
+            worst = max(worst, e)
+            rows.append((f"fig9/{model}/{label}",
+                         pred.batch_time * 1e6,
+                         f"max_dev_err={e*100:.2f}%"))
+    rows.append(("fig9/max_error", 0.0,
+                 f"max={worst*100:.2f}% (paper: <5%)"))
+    return rows
+
+
+def fig10_per_stage() -> List[Row]:
+    """§5.4 / Fig. 10: per-stage timestamp error, 2M4P(1D), micro 4.
+
+    Paper: largest per-stage median error 1.71%; error grows with
+    pipeline depth (stage index)."""
+    cfg = get_config("bert_large")
+    strat = Strategy(mp=2, pp=4, dp=1, microbatches=4)
+    sim = DistSim(cfg, strat, 16, 512, PROVIDER)
+    pred = sim.predict()
+    per_key = {}
+    for seed in range(20):
+        act = sim.replay(seed=seed, jitter_sigma=0.025)
+        for k, v in per_stage_error(pred.timeline, act.timeline).items():
+            per_key.setdefault(k, []).append(v)
+    medians = {k: float(np.median(v)) for k, v in per_key.items()}
+    worst = max(medians.values())
+    # per-stage mean error (F only) to show depth growth
+    rows = []
+    by_stage = {}
+    for (dev, name), m in medians.items():
+        if name.startswith("F"):
+            st = int(name.split(":")[1][1:])
+            by_stage.setdefault(st, []).append(m)
+    for st in sorted(by_stage):
+        rows.append((f"fig10/stage{st}", 0.0,
+                     f"median_err={np.mean(by_stage[st])*100:.3f}%"))
+    grows = (np.mean(by_stage[max(by_stage)])
+             >= np.mean(by_stage[min(by_stage)]))
+    rows.append(("fig10/max_median_error", pred.batch_time * 1e6,
+                 f"max={worst*100:.2f}% (paper: 1.71%); "
+                 f"grows_with_depth={grows}"))
+    return rows
+
+
+# Megatron-LM SC'21 Fig. 17 (145.6B, 8-way TP x 16-way PP, 128 GPUs):
+# achieved aggregate throughput rises with global batch size thanks to
+# smaller relative pipeline bubble. Digitized (batch, petaFLOP/s):
+_MEGATRON_145B = [(12, 40.0), (24, 61.0), (36, 72.0), (48, 79.0),
+                  (60, 84.0)]
+
+
+def fig11_large_scale() -> List[Row]:
+    """§5.5 / Fig. 11: 145B GPT, "8M16P1D" on 128 GPUs — normalized
+    throughput trend vs Megatron-LM's published curve."""
+    cfg = get_config("gpt_145b")
+    ours = []
+    for gb, _ in _MEGATRON_145B:
+        strat = Strategy(mp=8, pp=16, dp=1, microbatches=gb)
+        sim = DistSim(cfg, strat, global_batch=gb, seq=2048,
+                      provider=PROVIDER)
+        res = sim.predict()
+        ours.append(gb / res.batch_time)          # samples/s
+    # both curves normalized to the smallest batch: samples/s ratio vs
+    # achieved-FLOP/s ratio (same model ⇒ directly comparable trends)
+    ours_norm = [o / ours[0] for o in ours]
+    mega_norm = [t / _MEGATRON_145B[0][1] for _, t in _MEGATRON_145B]
+    rows = []
+    errs = []
+    for (gb, _), o, m in zip(_MEGATRON_145B, ours_norm, mega_norm):
+        errs.append(abs(o - m) / m)
+        rows.append((f"fig11/batch{gb}", 0.0,
+                     f"ours={o:.3f} megatron={m:.3f}"))
+    rows.append(("fig11/trend_mean_dev", 0.0,
+                 f"mean_dev={np.mean(errs)*100:.1f}% "
+                 f"(trend similarity vs published curve)"))
+    return rows
+
+
+def fig12_table2_search() -> List[Row]:
+    """§6 / Fig. 12 + Table 2: BERT-exLarge strategy search, 16 GPUs,
+    global batch 16. Paper: best 2.94 it/s, worst 0.398, speedup 7.379x;
+    actual measurement confirms the ranking."""
+    cfg = get_config("bert_exlarge")
+    t0 = time.perf_counter()
+    entries = grid_search(cfg, 16, 16, 512, provider=PROVIDER)
+    search_time = time.perf_counter() - t0
+    feasible = [e for e in entries if e.feasible]
+    best, second, worst = feasible[0], feasible[1], feasible[-1]
+    # "actual" verification via replay oracle
+    act_best = DistSim(cfg, best.strategy, 16, 512, PROVIDER
+                       ).replay(seed=0)
+    act_worst = DistSim(cfg, worst.strategy, 16, 512, PROVIDER
+                        ).replay(seed=0)
+    rows = [
+        ("fig12/best", best.batch_time * 1e6,
+         f"{best.strategy.label()}@m{best.strategy.microbatches}"
+         f"={best.iters_per_s:.2f}it/s"),
+        ("fig12/second", second.batch_time * 1e6,
+         f"{second.strategy.label()}={second.iters_per_s:.2f}it/s"),
+        ("fig12/worst", worst.batch_time * 1e6,
+         f"{worst.strategy.label()}={worst.iters_per_s:.3f}it/s"),
+        ("table2/speedup", search_time * 1e6,
+         f"speedup={worst.batch_time/best.batch_time:.2f}x "
+         f"(paper: 7.379x)"),
+        ("table2/actual_confirms", 0.0,
+         f"replay best {1/act_best.batch_time:.2f} > "
+         f"worst {1/act_worst.batch_time:.3f} it/s = "
+         f"{act_best.batch_time < act_worst.batch_time}"),
+    ]
+    return rows
+
+
+def table3_profiling_cost() -> List[Row]:
+    """§6 / Table 3: profiling cost vs direct running (paper: 0.1296x)."""
+    cfg = get_config("bert_exlarge")
+    rows = []
+    scales = []
+    for label, strat in [("2m1p8d", Strategy(mp=2, dp=8, microbatches=1)),
+                         ("2m4p2d", Strategy(mp=2, pp=4, dp=2,
+                                             microbatches=8)),
+                         ("1m8p2d", Strategy(pp=8, dp=2,
+                                             microbatches=8))]:
+        sim = DistSim(cfg, strat, 16, 512, PROVIDER)
+        t0 = time.perf_counter()
+        rep = sim.profiling_report()
+        sim_time = time.perf_counter() - t0
+        scales.append(rep["relative_scale"])
+        rows.append((f"table3/{label}", sim_time * 1e6,
+                     f"unique={rep['unique_events']} "
+                     f"instances={rep['total_instances']} "
+                     f"scale={rep['relative_scale']:.4f}"))
+    rows.append(("table3/mean_scale", 0.0,
+                 f"mean={np.mean(scales):.4f} (paper: 0.1296)"))
+    return rows
+
+
+def tab_allreduce_extrapolation() -> List[Row]:
+    """§4.2: ≤8-way profile → N-way extrapolation error (<2% claimed)."""
+    from repro.core.costmodel import collective_time
+    from repro.core.events import Event
+    rows = []
+    worst = 0.0
+    for n in (16, 32, 64, 128, 256):
+        for nbytes in (1e6, 1e8):
+            e = Event(kind="collective", name="x", coll_op="all_reduce",
+                      nbytes=nbytes, n_dev=n, scope="inter")
+            t_x = PROVIDER.time(e)
+            t_d = collective_time("all_reduce", nbytes, n, A40_CLUSTER,
+                                  "inter")
+            err = abs(t_x - t_d) / t_d
+            worst = max(worst, err)
+            rows.append((f"allreduce_extrap/n{n}/{int(nbytes)}B",
+                         t_d * 1e6, f"err={err*100:.3f}%"))
+    rows.append(("allreduce_extrap/max", 0.0,
+                 f"max={worst*100:.3f}% (paper: <2%)"))
+    return rows
+
+
+ALL = [fig8_batch_time, fig9_device_activity, fig10_per_stage,
+       fig11_large_scale, fig12_table2_search, table3_profiling_cost,
+       tab_allreduce_extrapolation]
+
+
+def straggler_whatif() -> List[Row]:
+    """Beyond-paper use-case: DistSim as a straggler what-if tool.
+
+    Injects one slow DP replica (1.3x step time) into the replay oracle
+    and compares three policies: do nothing (bulk-synchronous stall),
+    drop the replica (elastic re-plan to dp-1), or re-balance
+    microbatches. The timeline quantifies each — the decision a
+    1000-node scheduler has to make on every detected straggler."""
+    import numpy as np
+    cfg = get_config("bert_large")
+    strat = Strategy(mp=1, pp=2, dp=4, microbatches=4)
+    sim = DistSim(cfg, strat, 16, 512, PROVIDER)
+    healthy = sim.predict().batch_time
+
+    # policy 0: tolerate the straggler (sync stall at the gradient AR)
+    slow = sim.replay(seed=7, jitter_sigma=0.0, straggler_sigma=0.0,
+                      clock_sigma=0.0)
+    from repro.core.hierarchy import construct_timeline
+    tl = construct_timeline(cfg, strat, 16, 512, sim.provider,
+                            straggler_sigma=0.3, seed=7)
+    stalled = tl.batch_time
+
+    # policy 1: drop to dp=3 ⇒ invalid (16 % 3); re-plan to dp=2
+    strat2 = Strategy(mp=1, pp=2, dp=2, microbatches=4)
+    dropped = DistSim(cfg, strat2, 16, 512, PROVIDER).predict().batch_time
+
+    rows = [
+        ("straggler/healthy", healthy * 1e6, "baseline"),
+        ("straggler/tolerate", stalled * 1e6,
+         f"+{(stalled/healthy-1)*100:.0f}% (sync stall)"),
+        ("straggler/replan_dp2", dropped * 1e6,
+         f"+{(dropped/healthy-1)*100:.0f}% (fewer replicas)"),
+        ("straggler/decision", 0.0,
+         "tolerate" if stalled < dropped else "replan"),
+    ]
+    return rows
+
+
+def fig2_schedule_comparison() -> List[Row]:
+    """Paper Fig. 2: GPipe vs Dapple bubble structure (+ our
+    interleaved and PipeDream-async extensions)."""
+    cfg = get_config("bert_exlarge")
+    rows = []
+    for name in ("gpipe", "1f1b", "interleaved", "pipedream"):
+        strat = Strategy(mp=1, pp=4, dp=1, microbatches=8,
+                         schedule=name, vpp=2 if name == "interleaved"
+                         else 1)
+        res = DistSim(cfg, strat, 8, 512, PROVIDER).predict()
+        rows.append((f"fig2/{name}", res.batch_time * 1e6,
+                     f"bubble={res.bubble_fraction*100:.1f}%"))
+    return rows
+
+
+ALL = ALL + [straggler_whatif, fig2_schedule_comparison]
+
+
+def grad_compression_whatif() -> List[Row]:
+    """Beyond-paper: DistSim what-if for int8 gradient compression on a
+    DP-heavy strategy (the multi-pod DCN regime — weights sync crosses
+    the slow inter-island link). Numerics of the compressor are verified
+    in tests/test_train_substrate.py; here DistSim quantifies the
+    payoff before anyone re-deploys the cluster."""
+    cfg = get_config("bert_exlarge")
+    rows = []
+    for label, ratio in (("fp16", 1.0), ("int8", 0.5), ("int8+ef", 0.25)):
+        strat = Strategy(mp=1, pp=1, dp=16, microbatches=1,
+                         grad_compress=ratio)
+        res = DistSim(cfg, strat, 16, 512, PROVIDER).predict()
+        rows.append((f"grad_compress/{label}", res.batch_time * 1e6,
+                     f"{res.throughput_iters:.2f} it/s"))
+    base = float(rows[0][1])
+    rows.append(("grad_compress/speedup", 0.0,
+                 f"{base/float(rows[-1][1]):.2f}x on DP-bound strategy"))
+    return rows
+
+
+ALL = ALL + [grad_compression_whatif]

@@ -1,0 +1,66 @@
+"""Benchmark harness — one function per paper table/figure plus the
+roofline summary. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def roofline_summary():
+    """Summarize the dry-run roofline CSVs (if the sweep has been run)."""
+    rows = []
+    for tag, path in (("optimized", "results/dryrun_optimized.csv"),
+                      ("baseline", "results/dryrun_baseline.csv")):
+        if not os.path.exists(path):
+            rows.append((f"roofline/{tag}", 0.0, "missing (run dryrun)"))
+            continue
+        with open(path) as f:
+            lines = f.read().strip().splitlines()[1:]
+        fracs, dominants = [], {}
+        for line in lines:
+            parts = line.split(",")
+            dominants[parts[10]] = dominants.get(parts[10], 0) + 1
+            fracs.append(float(parts[12]))
+        import numpy as np
+        rows.append((f"roofline/{tag}", 0.0,
+                     f"cells={len(lines)} mean_frac={np.mean(fracs):.3f} "
+                     f"dominant={dominants}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figs
+
+    benches = list(paper_figs.ALL) + [roofline_summary]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        if args.only and args.only not in bench.__name__:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = bench()
+        except Exception as e:      # pragma: no cover
+            print(f"{bench.__name__},0,ERROR:{e!r}")
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.stderr.write(f"[{bench.__name__}: "
+                         f"{time.perf_counter()-t0:.1f}s]\n")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

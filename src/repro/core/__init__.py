@@ -1,0 +1,26 @@
+"""DistSim: event-based performance model of hybrid distributed training.
+
+The paper's primary contribution: events (dedup of identical work),
+profiling providers, hierarchical MP→PP→DP timeline construction, the
+replay oracle, and the strategy-search use-case.
+
+Public API:
+    from repro.core import DistSim, Strategy, grid_search
+"""
+from repro.core.events import Strategy, Event, ComposedEvent
+from repro.core.simulator import DistSim, SimResult
+from repro.core.search import grid_search, SearchEntry
+from repro.core.costmodel import (ClusterSpec, V5E_POD, A40_CLUSTER,
+                                  collective_time, p2p_time)
+from repro.core.profiler import (AnalyticalProvider, MeasuredProvider,
+                                 Provider, profiling_cost)
+from repro.core.timeline import (Timeline, Activity, batch_time_error,
+                                 activity_error, per_stage_error)
+
+__all__ = [
+    "DistSim", "SimResult", "Strategy", "Event", "ComposedEvent",
+    "grid_search", "SearchEntry", "ClusterSpec", "V5E_POD", "A40_CLUSTER",
+    "AnalyticalProvider", "MeasuredProvider", "Provider", "profiling_cost",
+    "Timeline", "Activity", "batch_time_error", "activity_error",
+    "per_stage_error", "collective_time", "p2p_time",
+]

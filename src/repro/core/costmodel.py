@@ -1,0 +1,106 @@
+"""Cluster + analytical event cost model.
+
+A ``ClusterSpec`` describes the interconnect hierarchy; two presets:
+
+* ``V5E_POD``   — the deployment target (ICI torus intra-pod, DCN inter-pod).
+* ``A40_CLUSTER`` — the paper's testbed shape (NVLink intra-node, IB
+  inter-node), used by the paper-reproduction benchmarks so the error
+  numbers are comparable with the published figures.
+
+The all-reduce model is the paper's §4.2 extrapolation: a ring moves
+2(N−1)/N · P bytes per device regardless of N, so a ≤8-way profile
+extends to any N; we add the per-hop latency term that matters at small P.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core.hw import ChipSpec, V5E, mxu_efficiency
+from repro.core.modelgraph import GEMM
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    name: str
+    chip: ChipSpec
+    devices_per_island: int          # node (GPU) or pod (TPU)
+    intra_bw: float                  # bytes/s per device, island-internal
+    inter_bw: float                  # bytes/s per device, cross-island
+    intra_latency: float
+    inter_latency: float
+
+
+V5E_POD = ClusterSpec(
+    name="v5e-pod",
+    chip=V5E,
+    devices_per_island=256,
+    intra_bw=V5E.ici_link_bw * V5E.ici_links_per_axis,   # 2 links/axis ring
+    inter_bw=V5E.dcn_bw,
+    intra_latency=V5E.ici_hop_latency,
+    inter_latency=V5E.dcn_latency,
+)
+
+# A40 calibration: the paper trains with PyTorch eager; achieved GEMM
+# throughput there is far below the 150 TF/s bf16 tensor-core peak.
+# 37 TF/s (the fp32 tensor-core rate) reproduces the paper's absolute
+# iteration times within ~2x, which is what an uncalibrated analytical
+# provider can claim (MeasuredProvider exists for exact calibration).
+_A40 = ChipSpec(name="a40", peak_flops_bf16=37e12, hbm_bw=696e9,
+                hbm_bytes=48e9, op_overhead=4e-6)
+A40_CLUSTER = ClusterSpec(
+    name="a40-cluster",
+    chip=_A40,
+    devices_per_island=4,            # 4 GPUs per server (paper testbed)
+    intra_bw=56e9,                   # PCIe/NVLink-ish effective
+    inter_bw=12.5e9,                 # 100 Gb IB
+    intra_latency=5e-6,
+    inter_latency=15e-6,
+)
+
+
+def gemm_time(g: GEMM, chip: ChipSpec) -> float:
+    """Operator-level roofline with MXU efficiency curve."""
+    eff = mxu_efficiency(g.m, g.n, g.k, chip)
+    t_compute = g.flops / (chip.peak_flops_bf16 * eff)
+    t_memory = g.bytes / chip.hbm_bw
+    return max(t_compute, t_memory) + chip.op_overhead
+
+
+def compute_time(gemms: Tuple[GEMM, ...], chip: ChipSpec) -> float:
+    return sum(gemm_time(g, chip) for g in gemms)
+
+
+def collective_time(op: str, nbytes: float, n_dev: int,
+                    cluster: ClusterSpec, scope: str = "intra") -> float:
+    """Ring-based collective on n_dev devices.
+
+    op ∈ {all_reduce, all_gather, reduce_scatter, all_to_all}.
+    nbytes = FULL tensor size (pre-sharding for ag/rs conventions follows
+    XLA: all_gather output, reduce_scatter input).
+    """
+    if n_dev <= 1:
+        return 0.0
+    bw = cluster.intra_bw if scope == "intra" else cluster.inter_bw
+    lat = (cluster.intra_latency if scope == "intra"
+           else cluster.inter_latency)
+    if op == "all_reduce":
+        vol = 2.0 * (n_dev - 1) / n_dev * nbytes
+        hops = 2 * (n_dev - 1)
+    elif op in ("all_gather", "reduce_scatter"):
+        vol = (n_dev - 1) / n_dev * nbytes
+        hops = n_dev - 1
+    elif op == "all_to_all":
+        vol = (n_dev - 1) / n_dev * nbytes
+        hops = n_dev - 1
+    else:
+        raise ValueError(op)
+    return vol / bw + hops * lat
+
+
+def p2p_time(nbytes: float, cluster: ClusterSpec,
+             scope: str = "intra") -> float:
+    bw = cluster.intra_bw if scope == "intra" else cluster.inter_bw
+    lat = (cluster.intra_latency if scope == "intra"
+           else cluster.inter_latency)
+    return nbytes / bw + lat

@@ -1,0 +1,87 @@
+"""DistSim top-level API (paper Fig. 6).
+
+    sim = DistSim(cfg, strategy, global_batch=16, seq=512)
+    result = sim.predict()          # deduped-event timeline (the model)
+    actual = sim.replay(seed=0)     # discrete-event oracle ("actual run")
+
+``predict`` uses each unique event's profiled mean once — the paper's
+construction. ``replay`` executes every per-device event instance with
+profiling jitter, straggler and clock effects — our stand-in for the real
+16-GPU cluster (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.costmodel import ClusterSpec, V5E_POD
+from repro.core.events import Strategy, build_stage_events, unique_events
+from repro.core.hierarchy import construct_timeline
+from repro.core.profiler import (AnalyticalProvider, Provider,
+                                 profile_events, profiling_cost)
+from repro.core.timeline import Timeline
+
+
+@dataclasses.dataclass
+class SimResult:
+    timeline: Timeline
+    batch_time: float
+    throughput_iters: float
+    throughput_tokens: float
+    utilization: Dict[int, float]
+    bubble_fraction: float
+
+
+class DistSim:
+    def __init__(self, cfg: ArchConfig, strategy: Strategy,
+                 global_batch: int, seq: int,
+                 provider: Optional[Provider] = None):
+        self.cfg = cfg
+        self.strategy = strategy
+        self.global_batch = global_batch
+        self.seq = seq
+        self.provider = provider or AnalyticalProvider(V5E_POD)
+        if global_batch % (strategy.dp * strategy.microbatches):
+            raise ValueError(
+                f"global_batch {global_batch} not divisible by "
+                f"dp*microbatches = {strategy.dp * strategy.microbatches}")
+
+    # ---- the performance model ----
+    def predict(self) -> SimResult:
+        tl = construct_timeline(self.cfg, self.strategy, self.global_batch,
+                                self.seq, self.provider)
+        return self._result(tl)
+
+    # ---- the "actual run" oracle ----
+    def replay(self, seed: int = 0, jitter_sigma: float = 0.025,
+               straggler_sigma: float = 0.0,
+               clock_sigma: float = 0.0) -> SimResult:
+        tl = construct_timeline(self.cfg, self.strategy, self.global_batch,
+                                self.seq, self.provider,
+                                jitter_sigma=jitter_sigma,
+                                straggler_sigma=straggler_sigma,
+                                clock_sigma=clock_sigma, seed=seed)
+        return self._result(tl)
+
+    def _result(self, tl: Timeline) -> SimResult:
+        bt = tl.batch_time
+        return SimResult(
+            timeline=tl,
+            batch_time=bt,
+            throughput_iters=1.0 / bt if bt else 0.0,
+            throughput_tokens=self.global_batch * self.seq / bt if bt else 0,
+            utilization=tl.utilization(),
+            bubble_fraction=tl.bubble_fraction(),
+        )
+
+    # ---- Table 3 accounting ----
+    def profiling_report(self) -> Dict[str, float]:
+        micro = self.global_batch // (self.strategy.dp
+                                      * self.strategy.microbatches)
+        stages = build_stage_events(self.cfg, self.strategy, micro, self.seq,
+                                    self.provider.cluster.devices_per_island)
+        counts = unique_events(stages, self.strategy,
+                               self.provider.cluster.devices_per_island)
+        profile = profile_events(counts.keys(), self.provider)
+        return profiling_cost(counts, profile)

@@ -1,0 +1,121 @@
+"""Per-device activity timeline — DistSim's output artifact (paper Fig. 6).
+
+Activities carry (device, kind, stage, micro, start, end); utilities
+compute batch time, per-device busy/idle, bubble fraction, and the
+paper's evaluation metrics (batch-time error, per-device activity error,
+per-stage timestamp error).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Activity:
+    device: int
+    name: str              # e.g. "F:s2:m5"
+    kind: str              # F | B | P2P | AR | OPT
+    start: float
+    end: float
+    stage: int = -1
+    micro: int = -1
+
+    @property
+    def dur(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class Timeline:
+    activities: List[Activity]
+    n_devices: int
+
+    @property
+    def batch_time(self) -> float:
+        return max((a.end for a in self.activities), default=0.0)
+
+    def by_device(self) -> Dict[int, List[Activity]]:
+        out: Dict[int, List[Activity]] = {d: [] for d in range(self.n_devices)}
+        for a in self.activities:
+            out[a.device].append(a)
+        for v in out.values():
+            v.sort(key=lambda a: a.start)
+        return out
+
+    def busy_time(self, device: int, kinds=("F", "B", "AR", "OPT")) -> float:
+        return sum(a.dur for a in self.activities
+                   if a.device == device and a.kind in kinds)
+
+    def utilization(self) -> Dict[int, float]:
+        bt = self.batch_time or 1.0
+        return {d: self.busy_time(d) / bt for d in range(self.n_devices)}
+
+    def bubble_fraction(self) -> float:
+        util = self.utilization()
+        return 1.0 - sum(util.values()) / max(1, len(util))
+
+    def compute_index(self) -> Dict[Tuple[int, str], Activity]:
+        """(device, name) → activity, compute events only."""
+        return {(a.device, a.name): a for a in self.activities
+                if a.kind in ("F", "B")}
+
+
+# --------------------------------------------------------------------------
+# evaluation metrics (paper §5)
+# --------------------------------------------------------------------------
+
+def batch_time_error(pred: Timeline, actual: Timeline) -> float:
+    """§5.2 relative iteration-time error."""
+    at = actual.batch_time
+    return abs(pred.batch_time - at) / at if at else 0.0
+
+
+def activity_error(pred: Timeline, actual: Timeline) -> Dict[int, float]:
+    """§5.3: per-device mean |timestamp bias| of compute events,
+    normalized by actual batch time."""
+    ai = actual.compute_index()
+    bt = actual.batch_time or 1.0
+    per_dev: Dict[int, List[float]] = {}
+    for key, p in pred.compute_index().items():
+        a = ai.get(key)
+        if a is None:
+            continue
+        err = 0.5 * (abs(p.start - a.start) + abs(p.end - a.end)) / bt
+        per_dev.setdefault(key[0], []).append(err)
+    return {d: sum(v) / len(v) for d, v in per_dev.items() if v}
+
+
+def per_stage_error(pred: Timeline, actual: Timeline
+                    ) -> Dict[Tuple[int, str], float]:
+    """§5.4: per (device, F/B:stage:micro) timestamp error."""
+    ai = actual.compute_index()
+    bt = actual.batch_time or 1.0
+    out = {}
+    for key, p in pred.compute_index().items():
+        a = ai.get(key)
+        if a is not None:
+            out[key] = 0.5 * (abs(p.start - a.start)
+                              + abs(p.end - a.end)) / bt
+    return out
+
+
+def to_chrome_trace(tl: Timeline, path: str) -> None:
+    """Export a timeline as a Chrome trace (chrome://tracing /
+    Perfetto). One row per device; compute/comm events color-coded by
+    phase."""
+    import json
+    events = []
+    for a in tl.activities:
+        events.append({
+            "name": a.name, "ph": "X",
+            "ts": a.start * 1e6, "dur": max(a.dur * 1e6, 0.01),
+            "pid": 0, "tid": a.device,
+            "cat": a.kind,
+            "args": {"stage": a.stage, "micro": a.micro},
+        })
+    meta = [{"name": "thread_name", "ph": "M", "pid": 0, "tid": d,
+             "args": {"name": f"device {d}"}}
+            for d in range(tl.n_devices)]
+    with open(path, "w") as f:
+        json.dump({"traceEvents": meta + events}, f)

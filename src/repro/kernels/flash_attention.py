@@ -1,0 +1,115 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native adaptation (DESIGN.md §2): the (bq x bkv) score tile lives in
+VMEM and feeds the MXU directly — the tile never round-trips to HBM
+(the pure-JAX flash path pays that traffic; see §Perf). Block sizes are
+MXU-aligned (multiples of 128 for the contracting/lane dims).
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks); running (max, denom,
+acc) in VMEM scratch, finalized on the last kv block. Causal/sliding-
+window masking is derived from program ids (contiguous positions).
+
+Layout: q,k,v are (BH, S, hd) — ops.py adapts the model's
+(B, S, H, hd) GQA layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_kv: int, n_kv: int, seq_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0)
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos < seq_k                              # kv padding
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_sc[...] = l_sc[...] * alpha + p.sum(axis=1)
+    acc_sc[...] = acc_sc[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_sc[...]
+                    / jnp.maximum(l_sc[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window=None,
+                       block_q: int = 128, block_kv: int = 128,
+                       interpret: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, hd) with equal q/kv lengths per call. Returns
+    (BH, Sq, hd). Pads S to block multiples internally."""
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, max(8, sq))
+    block_kv = min(block_kv, max(8, sk))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq = q.shape[1] // block_q
+    nk = k.shape[1] // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=nk, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, q.shape[1], hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

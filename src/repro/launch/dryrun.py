@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input shape x mesh) cell against
+the production meshes — (16,16)=256 chips single-pod and (2,16,16)=512
+chips multi-pod — and records memory_analysis / cost_analysis / parsed
+collective bytes for EXPERIMENTS.md §Dry-run and §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch qwen2_1_5b] [--shape train_4k] [--multi-pod both] \
+        [--out results/dryrun.csv]
+
+The XLA_FLAGS line above MUST run before any other jax-touching import —
+jax locks the device count on first init. Do not move it.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (SHAPES, arch_shapes, get_config, list_archs)
+from repro.core import roofline
+from repro.core.hw import V5E
+from repro.core.modelgraph import model_flops_per_token
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import lm
+from repro.models.api import build_model, input_specs
+from repro.models.layers import ModelOptions
+from repro.parallel import sharding
+from repro.train import optimizer as optlib
+from repro.train.step import (TrainConfig, make_prefill_step,
+                              make_serve_step, make_train_step)
+
+
+def model_options(cfg, shape, mesh, baseline: bool = False,
+                  mapping: str = "tp_sp") -> ModelOptions:
+    """Per-cell runtime knobs (the perf hillclimb edits these)."""
+    bax = batch_axes(mesh)
+    act_spec = None
+    qkv_spec = None
+    if mapping == "fsdp_cp" and shape.kind == "train":
+        # §Perf C3: no tensor parallelism — batch over (pod,data), SEQ
+        # over `model` (context parallelism), weights fully sharded
+        # (ZeRO-3 over data x model). Activation TP collectives vanish;
+        # per-layer weight all-gathers replace them (cheaper when
+        # act_bytes/layer >> weight_bytes/layer).
+        act_spec = P(bax, "model", None)
+        qkv_spec = P(bax, "model", None, None)
+        return ModelOptions(dtype=jnp.bfloat16, attn_impl="auto",
+                            remat=True, act_spec=act_spec,
+                            qkv_spec=qkv_spec, kv_spec=qkv_spec)
+    if shape.kind == "train" and not baseline:
+        # Megatron-SP: shard the residual stream's sequence dim over
+        # `model` between layers (activation memory / 16)
+        if shape.seq_len % mesh.shape["model"] == 0:
+            act_spec = P(bax, "model", None)
+        # attention computes with heads over `model` (SP gather at qkv)
+        qkv_spec = P(bax, None, "model", None)
+    elif shape.kind == "prefill" and not baseline:
+        # serving: pin batch over data + heads over model; without this,
+        # FSDP-sharded weights make XLA replicate activations over
+        # `data` (measured 6.5x FLOPs — EXPERIMENTS.md §Perf A)
+        act_spec = P(bax, None, None)
+        qkv_spec = P(bax, None, "model", None)
+    kv_spec = qkv_spec
+    if (qkv_spec is not None and cfg.n_kv_heads
+            and cfg.n_kv_heads % mesh.shape["model"]):
+        kv_spec = P(bax, None, None, None)   # KV heads replicated in TP
+    # explicit expert parallelism (§Perf B): all-to-all dispatch instead
+    # of GSPMD's all-gather/all-reduce of the full token buffer
+    moe_impl, ep_axis, dp_axes = "gather", None, None
+    if (cfg.moe is not None and not baseline
+            and shape.kind in ("train", "prefill")
+            and cfg.moe.n_experts % mesh.shape["model"] == 0):
+        moe_impl, ep_axis, dp_axes = "ep_a2a", "model", bax
+    # flash block autotune (§Perf C5): keep the per-step score tile
+    # (B_loc, H_loc, bq, bkv) f32 inside VMEM so it never spills to HBM
+    block_q, block_kv = 512, 1024
+    if cfg.n_heads and not baseline:
+        import numpy as np
+        dp_shards = int(np.prod([mesh.shape[a] for a in bax]))
+        b_loc = max(1, shape.global_batch // dp_shards)
+        h_loc = max(1, cfg.n_heads // mesh.shape["model"])
+        budget = 96 * 2 ** 20 / 4 / b_loc / h_loc     # f32 elems for bq*bkv
+        while block_q * block_kv > budget and block_q > 128:
+            block_q //= 2
+            if block_q * block_kv > budget and block_kv > 256:
+                block_kv //= 2
+    return ModelOptions(dtype=jnp.bfloat16, attn_impl="auto",
+                        remat=(shape.kind == "train"), act_spec=act_spec,
+                        qkv_spec=qkv_spec, kv_spec=kv_spec,
+                        moe_impl=moe_impl, ep_axis=ep_axis,
+                        dp_axes=dp_axes, block_q=block_q,
+                        block_kv=block_kv)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               baseline: bool = False, mapping: str = "tp_sp"):
+    """Lower + compile one cell; returns (report, memory_analysis_str)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = mesh.devices.size
+    opts = model_options(cfg, shape, mesh, baseline, mapping)
+    bax = batch_axes(mesh)
+
+    pshapes = jax.eval_shape(lambda: build_model(cfg, opts).init(
+        jax.random.PRNGKey(0)))
+    # FSDP (ZeRO-3): shard params over `data` too — beyond-paper default.
+    # Serving uses it only when TP-sharded weights alone exceed ~HBM/2
+    # (123B-class models); small models keep weights TP-only for latency.
+    fsdp = None
+    model_axis = "model"
+    if mapping == "fsdp_cp" and shape.kind == "train":
+        fsdp = ("data", "model")     # ZeRO-3 over the full 256 chips
+        model_axis = "__no_tp__"     # disable tensor-parallel rules
+    elif not baseline:
+        if shape.kind == "train":
+            fsdp = "data"
+        elif cfg.n_params() * 2 / mesh.shape["model"] > 6e9:
+            fsdp = "data"
+    pspecs = sharding.param_specs(pshapes, mesh, model_axis=model_axis,
+                                  fsdp_axes=fsdp)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            tstep = make_train_step(cfg, opts, TrainConfig(),
+                                    grad_specs=pspecs)
+            ostate = jax.eval_shape(optlib.init, pshapes)
+            ospecs = optlib.state_specs(pspecs)
+            if not baseline:      # ZeRO-1: moments sharded over `data` too
+                ospecs = sharding.zero1_specs(ostate, ospecs, mesh)
+            batch = input_specs(cfg, shape, opts)
+            bspecs = sharding.batch_specs(batch, mesh, bax)
+            lowered = jax.jit(
+                tstep,
+                in_shardings=(pspecs, ospecs, bspecs),
+                out_shardings=(pspecs, ospecs, None),
+                donate_argnums=(0, 1),
+            ).lower(pshapes, ostate, batch)
+        elif shape.kind == "prefill":
+            fstep = make_prefill_step(cfg, opts)
+            batch = input_specs(cfg, shape, opts)
+            bspecs = sharding.batch_specs(batch, mesh, bax)
+            lowered = jax.jit(
+                fstep, in_shardings=(pspecs, bspecs),
+            ).lower(pshapes, batch)
+        else:  # decode
+            sstep = make_serve_step(cfg, opts)
+            specs = input_specs(cfg, shape, opts)
+            cache, batch = specs["cache"], specs["batch"]
+            cspecs = sharding.cache_specs(
+                cache, mesh, bax, seq_axis="data")
+            bspecs = sharding.batch_specs(batch, mesh, bax)
+            lowered = jax.jit(
+                sstep,
+                in_shardings=(pspecs, cspecs, bspecs),
+                out_shardings=(None, cspecs),
+                donate_argnums=(1,),
+            ).lower(pshapes, cache, batch)
+
+        compiled = lowered.compile()
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+
+    tokens = shape.global_batch * shape.seq_len
+    if shape.is_decode:
+        tokens = shape.global_batch          # one new token per sequence
+    mf = model_flops_per_token(cfg) * tokens
+    if shape.kind == "train":
+        pass                                  # 6ND already includes bwd
+    else:
+        mf /= 3.0                             # fwd only = 2ND
+
+    rep = roofline.analyze(arch, shape_name, mesh_name, n_chips, cost, hlo,
+                           mf, V5E, mem)
+    return rep, mem
+
+
+def run(archs, shapes, pods, out=None, baseline=False, verbose=True,
+        mapping="tp_sp"):
+    rows = [roofline.HEADER]
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        valid = {s.name for s in arch_shapes(cfg)}
+        for shape_name in shapes:
+            if shape_name not in valid:
+                continue
+            for multi_pod in pods:
+                tag = f"{arch}/{shape_name}/{'2x16x16' if multi_pod else '16x16'}"
+                t0 = time.time()
+                try:
+                    rep, mem = lower_cell(arch, shape_name, multi_pod,
+                                          baseline, mapping)
+                    rows.append(rep.row())
+                    if verbose:
+                        print(f"[ok] {tag}: compile {time.time()-t0:.1f}s "
+                              f"dominant={rep.dominant} "
+                              f"t=({rep.t_compute*1e3:.2f},"
+                              f"{rep.t_memory*1e3:.2f},"
+                              f"{rep.t_collective*1e3:.2f})ms "
+                              f"frac={rep.roofline_fraction:.2f}")
+                        print(f"     memory: {mem}")
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    if verbose:
+                        traceback.print_exc()
+    if out:
+        with open(out, "w") as f:
+            f.write("\n".join(rows) + "\n")
+        print(f"wrote {out}")
+    return rows, failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["both", "single", "multi"])
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful baseline (no beyond-paper opts)")
+    ap.add_argument("--mapping", default="tp_sp",
+                    choices=["tp_sp", "fsdp_cp"],
+                    help="parallelism mapping (fsdp_cp = §Perf C3)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(list_archs(assigned_only=True))
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = {"both": [False, True], "single": [False],
+            "multi": [True]}[args.multi_pod]
+    _, failures = run(archs, shapes, pods, args.out, args.baseline,
+                      verbose=not args.quiet, mapping=args.mapping)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        sys.exit(1)
+    print("\nall cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (module import never touches jax
+device state). Single-pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips across 2 pods, axes (pod, data, model);
+the ``pod`` axis crosses DCN and carries only data parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """The mesh axes that carry the batch (DP) dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,126 @@
+"""Unified model API: one entry point per architecture family.
+
+``build_model(cfg, opts)`` returns a ``ModelAPI`` with functional
+``init / forward / loss / init_cache / decode_step`` members, used by the
+trainer, the server, the dry-run and the smoke tests alike.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch x shape) cell — weak-type-correct, shardable,
+and allocation-free (the dry-run contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.layers import ModelOptions, DEFAULT_OPTIONS
+
+# VLM stub: number of precomputed patch-embedding positions
+N_PATCHES = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    opts: ModelOptions
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., jax.Array]
+    loss: Callable[..., jax.Array]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def build_model(cfg: ArchConfig,
+                opts: ModelOptions = DEFAULT_OPTIONS) -> ModelAPI:
+    if cfg.enc_dec:
+        def init_cache(batch: int, max_seq: int):
+            return encdec.init_cache(cfg, batch, max_seq,
+                                     enc_frames=max(max_seq // 2, 8),
+                                     opts=opts)
+        return ModelAPI(
+            cfg=cfg, opts=opts,
+            init=lambda key: encdec.init_params(cfg, key, opts),
+            forward=lambda p, b: encdec.forward(cfg, p, b, opts),
+            loss=lambda p, b: encdec.loss_fn(cfg, p, b, opts),
+            init_cache=init_cache,
+            decode_step=lambda p, c, b: encdec.decode_step(cfg, p, c, b, opts),
+        )
+    return ModelAPI(
+        cfg=cfg, opts=opts,
+        init=lambda key: lm.init_params(cfg, key, opts),
+        forward=lambda p, b: lm.forward(cfg, p, b, opts),
+        loss=lambda p, b: lm.loss_fn(cfg, p, b, opts),
+        init_cache=lambda batch, max_seq: lm.init_cache(cfg, batch, max_seq,
+                                                        opts),
+        decode_step=lambda p, c, b: lm.decode_step(cfg, p, c, b, opts),
+    )
+
+
+# --------------------------------------------------------------------------
+# input specs (dry-run stand-ins) and concrete batches (smoke tests)
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                opts: ModelOptions = DEFAULT_OPTIONS) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the *batch* argument of train/prefill steps,
+    or the (cache, batch) pair for decode steps."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        train = shape.kind == "train"
+        if cfg.enc_dec:
+            half = s // 2
+            batch = {"tokens": _sds((b, half), jnp.int32)}
+            if train:
+                batch["labels"] = _sds((b, half), jnp.int32)
+            if cfg.audio_stub:
+                batch["frame_embeds"] = _sds((b, half, cfg.d_model),
+                                             opts.dtype)
+            else:
+                batch["tokens_enc"] = _sds((b, half), jnp.int32)
+            return batch
+        if cfg.vision_stub:
+            n_patches = min(N_PATCHES, s // 2)
+            n_txt = s - n_patches
+            batch = {"patch_embeds": _sds((b, n_patches, cfg.d_model),
+                                          opts.dtype),
+                     "tokens": _sds((b, n_txt), jnp.int32)}
+            if train:
+                batch["labels"] = _sds((b, n_txt), jnp.int32)
+            return batch
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if train:
+            batch["labels"] = _sds((b, s), jnp.int32)
+        return batch
+
+    # decode: cache specs + one-token batch
+    api = build_model(cfg, opts)
+    cache = jax.eval_shape(lambda: api.init_cache(b, s))
+    batch = {"tokens": _sds((b, 1), jnp.int32)}
+    return {"cache": cache, "batch": batch}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array,
+               opts: ModelOptions = DEFAULT_OPTIONS) -> Dict[str, Any]:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape, opts)
+
+    def realize(spec, k):
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            return jax.random.randint(k, spec.shape, 0,
+                                      min(cfg.vocab, 32000), spec.dtype)
+        return jax.random.normal(k, spec.shape, jnp.float32).astype(spec.dtype)
+
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(key, len(leaves))
+    out = [realize(l, k) if isinstance(l, jax.ShapeDtypeStruct) else l
+           for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)

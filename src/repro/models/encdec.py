@@ -1,0 +1,211 @@
+"""Encoder-decoder assembly (whisper-tiny backbone, T5).
+
+Encoder: bidirectional self-attention blocks. Decoder: causal self-attention
++ cross-attention + FFN. ``n_layers`` means n encoder AND n decoder layers.
+Positional encoding is RoPE for both stacks (DESIGN.md: performance-shape
+equivalent to sinusoidal/relative-bias; the modality frontend is a stub).
+
+Decode caches: ring-buffer self-attention KV + precomputed cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import ModelOptions, DEFAULT_OPTIONS
+from repro.models.lm import (_attn_shapes, _ffn_shapes, _attn_block,
+                             _ffn_block, _init_tree, _chunked_ce)
+
+
+def encdec_param_shapes(cfg: ArchConfig):
+    enc = {**_attn_shapes(cfg), "ffn": _ffn_shapes(cfg)}
+    dec = {**_attn_shapes(cfg), "cross": _attn_shapes(cfg),
+           "ffn": _ffn_shapes(cfg)}
+    return enc, dec
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                opts: ModelOptions = DEFAULT_OPTIONS):
+    dtype = opts.dtype
+    kemb, kenc, kdec = jax.random.split(key, 3)
+    enc_sh, dec_sh = encdec_param_shapes(cfg)
+
+    def stack(k, sh, n):
+        base = _init_tree(k, sh, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape).copy(), base)
+
+    params = {
+        "embed": (jax.random.normal(kemb, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "enc_layers": stack(kenc, enc_sh, cfg.n_layers),
+        "dec_layers": stack(kdec, dec_sh, cfg.n_layers),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            jax.random.fold_in(kemb, 1), (cfg.d_model, cfg.vocab),
+            jnp.float32) * 0.02).astype(dtype)
+    return params
+
+
+def encode(cfg: ArchConfig, params, enc_x: jax.Array,
+           opts: ModelOptions = DEFAULT_OPTIONS) -> jax.Array:
+    """enc_x: (B,F,d) stub embeddings (audio) or embedded tokens."""
+    b, f = enc_x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(f), (b, f))
+
+    def body(h, lp):
+        h = _attn_block(cfg, {k: v for k, v in lp.items() if k != "ffn"},
+                        h, positions, opts, causal=False)
+        h, _ = _ffn_block(cfg, lp["ffn"], h, opts)
+        return L.constrain(h, opts), None
+
+    body_fn = jax.checkpoint(body) if opts.remat else body
+    h, _ = lax.scan(body_fn, enc_x, params["enc_layers"])
+    return L.rmsnorm(h, params["enc_norm"])
+
+
+def decode_train(cfg: ArchConfig, params, enc_out: jax.Array,
+                 tokens: jax.Array, opts: ModelOptions = DEFAULT_OPTIONS):
+    """Teacher-forced decoder forward → hidden (B,T,d)."""
+    b, t = tokens.shape
+    f = enc_out.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    enc_pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+    x = params["embed"][tokens].astype(opts.dtype)
+
+    def body(h, lp):
+        h = _attn_block(cfg, {k: v for k, v in lp.items()
+                              if k not in ("ffn", "cross")},
+                        h, positions, opts, causal=True)
+        h = _attn_block(cfg, lp["cross"], h, positions, opts, causal=False,
+                        kv=(enc_out, enc_pos))
+        h, _ = _ffn_block(cfg, lp["ffn"], h, opts)
+        return L.constrain(h, opts), None
+
+    body_fn = jax.checkpoint(body) if opts.remat else body
+    h, _ = lax.scan(body_fn, x, params["dec_layers"])
+    return h
+
+
+def forward(cfg: ArchConfig, params, batch: Dict[str, jax.Array],
+            opts: ModelOptions = DEFAULT_OPTIONS) -> jax.Array:
+    enc_in = (batch["frame_embeds"].astype(opts.dtype) if cfg.audio_stub
+              else params["embed"][batch["tokens_enc"]].astype(opts.dtype))
+    enc_out = encode(cfg, params, enc_in, opts)
+    h = decode_train(cfg, params, enc_out, batch["tokens"], opts)
+    h = L.rmsnorm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", h, head)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, opts=DEFAULT_OPTIONS):
+    enc_in = (batch["frame_embeds"].astype(opts.dtype) if cfg.audio_stub
+              else params["embed"][batch["tokens_enc"]].astype(opts.dtype))
+    enc_out = encode(cfg, params, enc_in, opts)
+    h = decode_train(cfg, params, enc_out, batch["tokens"], opts)
+    h = L.rmsnorm(h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return _chunked_ce(h, head, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# decode (serve)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               enc_frames: int, opts: ModelOptions = DEFAULT_OPTIONS):
+    hd, kh, n = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "self": {
+            "k": jnp.zeros((n, batch, max_seq, kh, hd), opts.dtype),
+            "v": jnp.zeros((n, batch, max_seq, kh, hd), opts.dtype),
+            "kpos": jnp.full((n, batch, max_seq), 2 ** 30, jnp.int32),
+        },
+        # precomputed cross-attention K/V over the encoder output
+        "cross_k": jnp.zeros((n, batch, enc_frames, kh, hd), opts.dtype),
+        "cross_v": jnp.zeros((n, batch, enc_frames, kh, hd), opts.dtype),
+    }
+
+
+def precompute_cross(cfg: ArchConfig, params, enc_out: jax.Array):
+    """Fill cross_k/cross_v from an encoder pass (serve-time prefill)."""
+    def per_layer(lp):
+        k = jnp.einsum("bfd,de->bfe", enc_out, lp["cross"]["wk"])
+        v = jnp.einsum("bfd,de->bfe", enc_out, lp["cross"]["wv"])
+        if cfg.qkv_bias:
+            k, v = k + lp["cross"]["bk"], v + lp["cross"]["bv"]
+        b, f = k.shape[:2]
+        return (k.reshape(b, f, cfg.n_kv_heads, cfg.head_dim),
+                v.reshape(b, f, cfg.n_kv_heads, cfg.head_dim))
+    return jax.vmap(per_layer)(params["dec_layers"])
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch,
+                opts: ModelOptions = DEFAULT_OPTIONS):
+    tok = batch["tokens"]
+    x = params["embed"][tok].astype(opts.dtype)
+    pos = cache["pos"]
+    b = tok.shape[0]
+    hd, kh = cfg.head_dim, cfg.n_kv_heads
+    f = cache["cross_k"].shape[2]
+    enc_pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+
+    def body(h, xs):
+        lp, sk, sv, skp, ck, cv = xs
+        # self-attention (ring buffer)
+        p = {k: v for k, v in lp.items() if k not in ("ffn", "cross")}
+        hn = L.rmsnorm(h, p["ln"])
+        q = jnp.einsum("bsd,de->bse", hn, p["wq"])
+        k = jnp.einsum("bsd,de->bse", hn, p["wk"])
+        v = jnp.einsum("bsd,de->bse", hn, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = q.reshape(b, 1, cfg.n_heads, hd)
+        k = k.reshape(b, 1, kh, hd)
+        v = v.reshape(b, 1, kh, hd)
+        qpos = pos[:, None]
+        q = L.apply_rope(q, qpos, cfg.rope_theta)
+        k = L.apply_rope(k, qpos, cfg.rope_theta)
+        s = sk.shape[1]
+        slot = (pos % s).astype(jnp.int32)
+        bi = jnp.arange(b)
+        sk = sk.at[bi, slot].set(k[:, 0])
+        sv = sv.at[bi, slot].set(v[:, 0])
+        skp = skp.at[bi, slot].set(pos)
+        o = L.attention_decode(q, sk, sv, qpos, skp)
+        h = h + jnp.einsum("bse,ed->bsd",
+                           o.reshape(b, 1, cfg.n_heads * hd), p["wo"])
+
+        # cross-attention over cached encoder K/V
+        cp = lp["cross"]
+        hn = L.rmsnorm(h, cp["ln"])
+        q = jnp.einsum("bsd,de->bse", hn, cp["wq"])
+        if cfg.qkv_bias:
+            q = q + cp["bq"]
+        q = q.reshape(b, 1, cfg.n_heads, hd)
+        o = L.attention_decode(q, ck, cv, jnp.full((b, 1), 2 ** 29), enc_pos)
+        h = h + jnp.einsum("bse,ed->bsd",
+                           o.reshape(b, 1, cfg.n_heads * hd), cp["wo"])
+
+        h, _ = _ffn_block(cfg, lp["ffn"], h, opts)
+        return h, (sk, sv, skp)
+
+    x, (nk, nv, nkp) = lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self"]["k"], cache["self"]["v"],
+         cache["self"]["kpos"], cache["cross_k"], cache["cross_v"]))
+
+    new_cache = {**cache, "pos": pos + 1,
+                 "self": {"k": nk, "v": nv, "kpos": nkp}}
+    x = L.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, head)[:, 0], new_cache

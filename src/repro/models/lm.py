@@ -1,0 +1,514 @@
+"""Decoder-only LM assembly: dense / GQA / SWA / MoE / SSM / hybrid / VLM.
+
+Layer weights are STACKED over the layer axis and iterated with
+``lax.scan`` — this keeps the HLO size O(1) in depth (critical for the
+88-layer 123B dry-run) and gives XLA a single loop body to optimize.
+
+Public entry points (used by api.py):
+  init_params(cfg, key, opts)            → parameter pytree
+  forward(cfg, params, batch, opts)      → logits (train / prefill)
+  loss_fn(cfg, params, batch, opts)      → scalar loss (chunked CE)
+  init_cache(cfg, batch, max_seq, opts)  → decode cache pytree
+  decode_step(cfg, params, cache, batch, opts) → (logits, new cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.layers import ModelOptions, DEFAULT_OPTIONS
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+# --------------------------------------------------------------------------
+
+def _attn_shapes(cfg: ArchConfig):
+    d, hd = cfg.d_model, cfg.head_dim
+    sh = {
+        "ln": (d,),
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    if cfg.qkv_bias:
+        sh.update(bq=(cfg.n_heads * hd,), bk=(cfg.n_kv_heads * hd,),
+                  bv=(cfg.n_kv_heads * hd,))
+    return sh
+
+
+def _ffn_shapes(cfg: ArchConfig, use_moe: bool = True):
+    d = cfg.d_model
+    if cfg.moe is not None and use_moe:
+        return {"ln": (d,), **M.moe_params_shape(d, cfg.moe)}
+    if cfg.mlp_gelu:
+        return {"ln": (d,), "w1": (d, cfg.d_ff), "b1": (cfg.d_ff,),
+                "w2": (cfg.d_ff, d), "b2": (d,)}
+    return {"ln": (d,), "w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff),
+            "w_down": (cfg.d_ff, d)}
+
+
+def _ssm_shapes(cfg: ArchConfig):
+    return {"ln": (cfg.d_model,), **S.ssm_params_shape(cfg.d_model, cfg.ssm)}
+
+
+def hybrid_ssm_split(cfg: ArchConfig):
+    """(n_ssm_moe, n_ssm_dense) per hybrid period.
+
+    A period has `hybrid_period` layers: 1 attention (which takes the MoE
+    FFN when the period offset is MoE-aligned — true for jamba) and the
+    rest SSM. MoE hits every `moe_period`-th FFN.
+    """
+    per = cfg.hybrid_period
+    n_ssm = per - 1
+    if cfg.moe is None:
+        return 0, n_ssm
+    n_moe_total = per // cfg.moe_period
+    n_ssm_moe = max(0, n_moe_total - 1)        # attn layer takes one MoE slot
+    return n_ssm_moe, n_ssm - n_ssm_moe
+
+
+def block_shapes(cfg: ArchConfig) -> Dict[str, Dict]:
+    """Per-layer-kind parameter shape trees (unstacked)."""
+    out = {}
+    if cfg.family == "ssm":
+        out["ssm"] = _ssm_shapes(cfg)
+    elif cfg.hybrid_period:
+        n_moe, n_dense = hybrid_ssm_split(cfg)
+        out["attn"] = {**_attn_shapes(cfg), "ffn": _ffn_shapes(cfg)}
+        if n_moe:
+            out["ssm_moe"] = {**_ssm_shapes(cfg),
+                              "ffn": _ffn_shapes(cfg, use_moe=True)}
+        if n_dense:
+            out["ssm_dense"] = {**_ssm_shapes(cfg),
+                                "ffn": _ffn_shapes(cfg, use_moe=False)}
+    else:
+        out["attn"] = {**_attn_shapes(cfg), "ffn": _ffn_shapes(cfg)}
+    return out
+
+
+def _stack_counts(cfg: ArchConfig):
+    """How many stacked copies of each block kind."""
+    if cfg.family == "ssm":
+        return {"ssm": (cfg.n_layers,)}
+    if cfg.hybrid_period:
+        n_per = cfg.n_layers // cfg.hybrid_period
+        n_moe, n_dense = hybrid_ssm_split(cfg)
+        out = {"attn": (n_per,)}
+        if n_moe:
+            out["ssm_moe"] = (n_per, n_moe)
+        if n_dense:
+            out["ssm_dense"] = (n_per, n_dense)
+        return out
+    return {"attn": (cfg.n_layers,)}
+
+
+def _init_leaf(key, shape, dtype, scale=0.02):
+    if len(shape) == 1:
+        # norms/biases: scales → 1, biases → 0 (heuristic: names handled above)
+        return jnp.zeros(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _init_tree(key, shapes, dtype, prefix=()):
+    out = {}
+    names = sorted(shapes)
+    keys = jax.random.split(key, len(names))
+    for k, name in zip(keys, names):
+        v = shapes[name]
+        if isinstance(v, dict):
+            out[name] = _init_tree(k, v, dtype, prefix + (name,))
+        else:
+            leaf = _init_leaf(k, v, dtype)
+            if name in ("ln", "norm_scale") or name.startswith("ln"):
+                leaf = jnp.ones(v, dtype)
+            if name == "dt_bias":
+                leaf = jnp.log(jnp.expm1(
+                    jnp.linspace(1e-3, 0.1, v[0]))).astype(dtype)
+            if name == "A_log":
+                leaf = jnp.log(jnp.linspace(1.0, 16.0, v[0])).astype(dtype)
+            if name == "D":
+                leaf = jnp.ones(v, dtype)
+            out[name] = leaf
+    return out
+
+
+def init_params(cfg: ArchConfig, key: jax.Array,
+                opts: ModelOptions = DEFAULT_OPTIONS) -> Params:
+    dtype = opts.dtype
+    kemb, khead, kfin, *kblocks = jax.random.split(key, 8)
+    params: Params = {
+        "embed": (jax.random.normal(kemb, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (jax.random.normal(
+            khead, (cfg.d_model, cfg.vocab), jnp.float32) * 0.02).astype(dtype)
+
+    shapes = block_shapes(cfg)
+    counts = _stack_counts(cfg)
+    for i, (kind, stack) in enumerate(sorted(counts.items())):
+        base = _init_tree(kblocks[i], shapes[kind], dtype)
+        for n in reversed(stack):
+            base = jax.tree.map(
+                lambda x, n=n: jnp.broadcast_to(x, (n,) + x.shape).copy(), base)
+        params[f"{kind}_layers"] = base
+    return params
+
+
+def param_shapes(cfg: ArchConfig, opts: ModelOptions = DEFAULT_OPTIONS):
+    """ShapeDtypeStruct pytree without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), opts))
+
+
+# --------------------------------------------------------------------------
+# blocks (forward)
+# --------------------------------------------------------------------------
+
+def _attn_block(cfg, p, x, positions, opts, causal=True,
+                kv: Optional[tuple] = None):
+    """Pre-norm attention with residual. kv: optional (k_src, k_pos) for
+    cross-attention (enc-dec)."""
+    h = L.rmsnorm(x, p["ln"])
+    q = jnp.einsum("bsd,de->bse", h, p["wq"])
+    src = kv[0] if kv is not None else h
+    k = jnp.einsum("bsd,de->bse", src, p["wk"])
+    v = jnp.einsum("bsd,de->bse", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b, sq = q.shape[:2]
+    sk = k.shape[1]
+    hd = cfg.head_dim
+    q = L.constrain_qkv(q.reshape(b, sq, cfg.n_heads, hd), opts)
+    k = L.constrain_qkv(k.reshape(b, sk, cfg.n_kv_heads, hd), opts,
+                        is_kv=True)
+    v = L.constrain_qkv(v.reshape(b, sk, cfg.n_kv_heads, hd), opts,
+                        is_kv=True)
+    if kv is None:
+        k_pos = positions
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k_pos = kv[1]
+    o = L.attention(q, k, v, positions, k_pos, causal=causal,
+                    window=cfg.sliding_window if kv is None else None,
+                    opts=opts)
+    o = L.constrain_qkv(o, opts)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, sq, cfg.n_heads * hd), p["wo"])
+    # pin the row-parallel output to the residual sharding BEFORE the
+    # add: turns the partial-sum all-reduce into a reduce-scatter
+    # (Megatron-SP; §Perf C2 — 2x less wire bytes per layer)
+    o = L.constrain(o, opts)
+    return x + o
+
+
+def _ffn_block(cfg, p, x, opts):
+    h = L.rmsnorm(x, p["ln"])
+    aux = jnp.zeros((), jnp.float32)
+    if "router" in p:                       # MoE FFN
+        y, aux = M.moe_ffn(h, p, cfg.moe, opts.moe_impl, opts)
+    elif "w1" in p:                         # GELU MLP
+        y = L.gelu_mlp(h, p["w1"], p["b1"], p["w2"], p["b2"])
+    else:                                   # SwiGLU
+        y = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    # reduce-scatter (not all-reduce) the row-parallel output (§Perf C2)
+    y = L.constrain(y, opts)
+    return x + y, aux
+
+
+def _ssm_layer(cfg, p, x, opts):
+    h = L.rmsnorm(x, p["ln"])
+    sp = {k: v for k, v in p.items() if k not in ("ln", "ffn")}
+    x = x + S.ssm_block(h, sp, cfg.ssm)
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        x, aux = _ffn_block(cfg, p["ffn"], x, opts)
+    return x, aux
+
+
+def _attn_layer(cfg, p, x, positions, opts, causal=True):
+    pa = {k: v for k, v in p.items() if k != "ffn"}
+    x = _attn_block(cfg, pa, x, positions, opts, causal=causal)
+    x, aux = _ffn_block(cfg, p["ffn"], x, opts)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# backbone forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def backbone(cfg: ArchConfig, params: Params, x: jax.Array,
+             positions: jax.Array, opts: ModelOptions,
+             causal: bool = True) -> tuple:
+    """Stacked-layer scan. x: (B,S,d) → (B,S,d), aux loss."""
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _ssm_layer(cfg, lp, h, opts)
+            return (L.constrain(h, opts), aux + a), None
+        body_fn = jax.checkpoint(body) if opts.remat else body
+        (x, aux), _ = lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["ssm_layers"])
+        return x, aux
+
+    if cfg.hybrid_period:
+        def period(carry, lp):
+            h, aux = carry
+            h, a = _attn_layer(cfg, lp["attn"], h, positions, opts, causal)
+            aux = aux + a
+
+            def inner(c, sp):
+                hh, ax = c
+                hh, a2 = _ssm_layer(cfg, sp, hh, opts)
+                return (hh, ax + a2), None
+
+            for kind in ("ssm_moe", "ssm_dense"):
+                if kind in lp:
+                    (h, aux), _ = lax.scan(inner, (h, aux), lp[kind])
+            return (L.constrain(h, opts), aux), None
+
+        stacked = {"attn": params["attn_layers"]}
+        for kind in ("ssm_moe", "ssm_dense"):
+            if f"{kind}_layers" in params:
+                stacked[kind] = params[f"{kind}_layers"]
+        body_fn = jax.checkpoint(period) if opts.remat else period
+        (x, aux), _ = lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               stacked)
+        return x, aux
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _attn_layer(cfg, lp, h, positions, opts, causal)
+        return (L.constrain(h, opts), aux + a), None
+    body_fn = jax.checkpoint(body) if opts.remat else body
+    (x, aux), _ = lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                           params["attn_layers"])
+    return x, aux
+
+
+def embed_inputs(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+                 opts: ModelOptions):
+    """tokens (+ optional stub modality embeddings) → (B,S,d), positions."""
+    parts = []
+    if cfg.vision_stub and "patch_embeds" in batch:
+        parts.append(batch["patch_embeds"].astype(opts.dtype))
+    if cfg.audio_stub and "frame_embeds" in batch:
+        parts.append(batch["frame_embeds"].astype(opts.dtype))
+    if "tokens" in batch:
+        parts.append(params["embed"][batch["tokens"]])
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+            opts: ModelOptions = DEFAULT_OPTIONS) -> jax.Array:
+    """Full forward to logits (B,S,V)."""
+    x, positions = embed_inputs(cfg, params, batch, opts)
+    x, _ = backbone(cfg, params, x, positions, opts)
+    x = L.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def _chunked_ce(x: jax.Array, head: jax.Array, labels: jax.Array,
+                chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B,S,V): scan over S chunks."""
+    b, s, d = x.shape
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def step(tot, inp):
+        xx, ll = inp
+        logits = jnp.einsum("bsd,dv->bsv", xx, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+        valid = ll >= 0
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (tot[0] + nll.sum(), tot[1] + valid.sum()), None
+
+    (tot, cnt), _ = lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+            opts: ModelOptions = DEFAULT_OPTIONS) -> jax.Array:
+    x, positions = embed_inputs(cfg, params, batch, opts)
+    x, aux = backbone(cfg, params, x, positions, opts)
+    x = L.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    labels = batch["labels"]
+    if labels.shape[1] != x.shape[1]:       # stub modality prefix: no loss
+        pad = x.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+    ce = _chunked_ce(x, head, labels)
+    return ce + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# decode (serve_step)
+# --------------------------------------------------------------------------
+
+def _kv_cache_len(cfg: ArchConfig, max_seq: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               opts: ModelOptions = DEFAULT_OPTIONS) -> Dict[str, Any]:
+    """Decode cache pytree (all-zeros; kpos 2**30 marks empty)."""
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    s = _kv_cache_len(cfg, max_seq)
+    hd, kh = cfg.head_dim, cfg.n_kv_heads
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, s, kh, hd), opts.dtype),
+            "v": jnp.zeros((n, batch, s, kh, hd), opts.dtype),
+            "kpos": jnp.full((n, batch, s), 2 ** 30, jnp.int32),
+        }
+
+    if cfg.family == "ssm":
+        cache["ssm"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            S.init_ssm_cache(batch, cfg.d_model, cfg.ssm, opts.dtype))
+    elif cfg.hybrid_period:
+        n_per = cfg.n_layers // cfg.hybrid_period
+        cache["attn"] = kv(n_per)
+        n_moe, n_dense = hybrid_ssm_split(cfg)
+        base = S.init_ssm_cache(batch, cfg.d_model, cfg.ssm, opts.dtype)
+        for kind, n in (("ssm_moe", n_moe), ("ssm_dense", n_dense)):
+            if n:
+                cache[kind] = jax.tree.map(
+                    lambda x, n=n: jnp.broadcast_to(
+                        x, (n_per, n) + x.shape).copy(), base)
+    else:
+        cache["attn"] = kv(cfg.n_layers)
+    return cache
+
+
+def _attn_decode_block(cfg, p, x, pos, kcache, opts):
+    """x: (B,1,d); kcache: dict(k,v,kpos) for THIS layer (B,S,KH,hd)."""
+    b = x.shape[0]
+    h = L.rmsnorm(x, p["ln"])
+    q = jnp.einsum("bsd,de->bse", h, p["wq"])
+    k = jnp.einsum("bsd,de->bse", h, p["wk"])
+    v = jnp.einsum("bsd,de->bse", h, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    hd = cfg.head_dim
+    q = q.reshape(b, 1, cfg.n_heads, hd)
+    k = k.reshape(b, 1, cfg.n_kv_heads, hd)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    qpos = pos[:, None]                                   # (B,1)
+    q = L.apply_rope(q, qpos, cfg.rope_theta)
+    k = L.apply_rope(k, qpos, cfg.rope_theta)
+
+    s = kcache["k"].shape[1]
+    slot = (pos % s).astype(jnp.int32)                    # ring-buffer write
+    bi = jnp.arange(b)
+    knew = kcache["k"].at[bi, slot].set(k[:, 0])
+    vnew = kcache["v"].at[bi, slot].set(v[:, 0])
+    kposn = kcache["kpos"].at[bi, slot].set(pos)
+
+    o = L.attention_decode(q, knew, vnew, qpos, kposn,
+                           window=cfg.sliding_window)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, cfg.n_heads * hd), p["wo"])
+    return x + o, {"k": knew, "v": vnew, "kpos": kposn}
+
+
+def _ssm_decode_layer(cfg, p, x, cache, opts):
+    h = L.rmsnorm(x, p["ln"])
+    sp = {k: v for k, v in p.items() if k not in ("ln", "ffn")}
+    y, new_cache = S.ssm_block_decode(h, sp, cfg.ssm, cache)
+    x = x + y
+    if "ffn" in p:
+        x, _ = _ffn_block(cfg, p["ffn"], x, opts)
+    return x, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Dict[str, Any],
+                batch: Dict[str, jax.Array],
+                opts: ModelOptions = DEFAULT_OPTIONS):
+    """One-token decode. batch: {tokens: (B,1)}. Returns (logits(B,V), cache)."""
+    tok = batch["tokens"]
+    x = params["embed"][tok].astype(opts.dtype)           # (B,1,d)
+    pos = cache["pos"]
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, lc = xs
+            hh, nc = _ssm_decode_layer(cfg, lp, h, lc, opts)
+            return hh, nc
+        x, new_ssm = lax.scan(body, x, (params["ssm_layers"], cache["ssm"]))
+        new_cache = {**cache, "ssm": new_ssm, "pos": pos + 1}
+
+    elif cfg.hybrid_period:
+        ssm_kinds = [k for k in ("ssm_moe", "ssm_dense")
+                     if f"{k}_layers" in params]
+
+        def period(h, xs):
+            ap = xs["attn_p"]
+            pa = {k: v for k, v in ap.items() if k != "ffn"}
+            h, nac = _attn_decode_block(cfg, pa, h, pos, xs["attn_c"], opts)
+            h, _ = _ffn_block(cfg, ap["ffn"], h, opts)
+
+            def inner(hh, ys):
+                sp, sc = ys
+                hh, nsc = _ssm_decode_layer(cfg, sp, hh, sc, opts)
+                return hh, nsc
+
+            new_sc = {}
+            for kind in ssm_kinds:
+                h, new_sc[kind] = lax.scan(
+                    inner, h, (xs[f"{kind}_p"], xs[f"{kind}_c"]))
+            return h, (nac, new_sc)
+
+        xs = {"attn_p": params["attn_layers"], "attn_c": cache["attn"]}
+        for kind in ssm_kinds:
+            xs[f"{kind}_p"] = params[f"{kind}_layers"]
+            xs[f"{kind}_c"] = cache[kind]
+        x, (new_attn, new_ssm) = lax.scan(period, x, xs)
+        new_cache = {**cache, "attn": new_attn, "pos": pos + 1}
+        for kind in ssm_kinds:
+            new_cache[kind] = new_ssm[kind]
+
+    else:
+        def body(h, xs):
+            lp, lc = xs
+            pa = {k: v for k, v in lp.items() if k != "ffn"}
+            h, nc = _attn_decode_block(cfg, pa, h, pos, lc, opts)
+            h, _ = _ffn_block(cfg, lp["ffn"], h, opts)
+            return h, nc
+        x, new_attn = lax.scan(body, x, (params["attn_layers"],
+                                         cache["attn"]))
+        new_cache = {**cache, "attn": new_attn, "pos": pos + 1}
+
+    x = L.rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits, new_cache

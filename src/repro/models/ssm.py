@@ -1,0 +1,206 @@
+"""Mamba2 SSD (state-space duality) block, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 listing 1):
+intra-chunk dual (quadratic-in-chunk, matmul-heavy → MXU friendly) plus an
+inter-chunk linear recurrence via lax.scan. Decode uses the O(1) recurrent
+step on a (B, H, P, N) state cache.
+
+Single B/C group (G=1). Head layout: d_inner = expand*d_model = H*P.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+
+
+def ssm_dims(d_model: int, scfg: SSMConfig):
+    d_inner = scfg.expand * d_model
+    n_heads = d_inner // scfg.head_dim
+    return d_inner, n_heads
+
+
+def ssm_params_shape(d_model: int, scfg: SSMConfig):
+    d_inner, n_heads = ssm_dims(d_model, scfg)
+    conv_ch = d_inner + 2 * scfg.d_state
+    return {
+        "in_proj": (d_model, 2 * d_inner + 2 * scfg.d_state + n_heads),
+        "conv_w": (scfg.d_conv, conv_ch),
+        "conv_b": (conv_ch,),
+        "dt_bias": (n_heads,),
+        "A_log": (n_heads,),
+        "D": (n_heads,),
+        "norm_scale": (d_inner,),
+        "out_proj": (d_inner, d_model),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., Q) → (..., Q, Q) with S[i,j] = sum_{k=j+1..i} x_k, -inf i<j."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,L,C), w: (K,C)."""
+    k, c = w.shape
+    out = lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return out + b.astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B_mat, C_mat, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B,L,H,P); dt: (B,L,H) (post-softplus); A: (H,) negative;
+    B_mat/C_mat: (B,L,N). Returns (B,L,H,P) and final state (B,H,P,N).
+    """
+    b, l, h, p = x.shape
+    n = B_mat.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    f32 = jnp.float32
+    xb = (x * dt[..., None].astype(x.dtype)).reshape(b, nc, q, h, p)
+    Bc = B_mat.reshape(b, nc, q, n)
+    Cc = C_mat.reshape(b, nc, q, n)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, q, h)  # (B,nc,Q,H)
+    dA = dA.transpose(0, 1, 3, 2)                               # (B,nc,H,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # intra-chunk (dual / quadratic) term
+    L = jnp.exp(_segsum(dA))                                    # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc.astype(f32), Bc.astype(f32))
+    Y_diag = jnp.einsum("bcqs,bchqs,bcshp->bcqhp",
+                        scores, L, xb.astype(f32))
+
+    # per-chunk input → state contribution
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)             # (B,nc,H,Q)
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn",
+                        Bc.astype(f32), decay_states, xb.astype(f32))
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(dA_cs[..., -1])                       # (B,nc,H)
+
+    def step(h_prev, inp):
+        st, dec = inp                                           # (B,H,P,N),(B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev                                    # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, p, n), f32)
+    final_state, prev_states = lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    # inter-chunk (off-diagonal) output term
+    state_decay = jnp.exp(dA_cs)                                # (B,nc,H,Q)
+    Y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp",
+                       Cc.astype(f32), prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(b, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array     # (B, d_conv-1, conv_channels)
+    state: jax.Array    # (B, H, P, N) float32
+
+
+def init_ssm_cache(batch: int, d_model: int, scfg: SSMConfig,
+                   dtype=jnp.bfloat16) -> SSMCache:
+    d_inner, n_heads = ssm_dims(d_model, scfg)
+    conv_ch = d_inner + 2 * scfg.d_state
+    return SSMCache(
+        conv=jnp.zeros((batch, scfg.d_conv - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, n_heads, scfg.head_dim, scfg.d_state),
+                        jnp.float32))
+
+
+def _split_xbc(xbc, d_inner, d_state):
+    x = xbc[..., :d_inner]
+    B_mat = xbc[..., d_inner:d_inner + d_state]
+    C_mat = xbc[..., d_inner + d_state:]
+    return x, B_mat, C_mat
+
+
+def ssm_block(x_in: jax.Array, params, scfg: SSMConfig):
+    """Full Mamba2 block forward. x_in: (B,L,d) → (B,L,d)."""
+    from repro.models.layers import rmsnorm
+    b, l, d = x_in.shape
+    d_inner, n_heads = ssm_dims(d, scfg)
+    n = scfg.d_state
+
+    proj = jnp.einsum("bld,de->ble", x_in, params["in_proj"])
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -n_heads:]
+
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, B_mat, C_mat = _split_xbc(xbc, d_inner, n)
+    xs = xs.reshape(b, l, n_heads, scfg.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, _ = ssd_chunked(xs, dt, A, B_mat, C_mat, scfg.chunk)
+    y = y + xs * params["D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(b, l, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_scale"])
+    return jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+def ssm_block_decode(x_in: jax.Array, params, scfg: SSMConfig,
+                     cache: SSMCache):
+    """Single-token recurrent step. x_in: (B,1,d) → (B,1,d), new cache."""
+    from repro.models.layers import rmsnorm
+    b, _, d = x_in.shape
+    d_inner, n_heads = ssm_dims(d, scfg)
+    n = scfg.d_state
+    p = scfg.head_dim
+
+    proj = jnp.einsum("bld,de->ble", x_in, params["in_proj"])[:, 0]  # (B,E)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = proj[..., -n_heads:]
+
+    # rolling conv state
+    win = jnp.concatenate([cache.conv, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)
+                      ).astype(x_in.dtype)
+    new_conv = win[:, 1:]
+
+    xs, B_mat, C_mat = _split_xbc(xbc, d_inner, n)
+    xs = xs.reshape(b, n_heads, p)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dt * A)                                       # (B,H)
+    upd = (dt[..., None] * xs.astype(jnp.float32))[..., None] \
+        * B_mat.astype(jnp.float32)[:, None, None, :]             # (B,H,P,N)
+    h_new = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C_mat.astype(jnp.float32))
+    y = y.astype(xs.dtype) + xs * params["D"].astype(xs.dtype)[None, :, None]
+    y = y.reshape(b, d_inner)
+    y = rmsnorm((y * jax.nn.silu(z))[:, None, :], params["norm_scale"])
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return out, SSMCache(conv=new_conv, state=h_new)

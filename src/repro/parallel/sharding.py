@@ -1,0 +1,177 @@
+"""Sharding rules: logical parameter/activation axes → mesh axes.
+
+Megatron-style tensor parallelism over the ``model`` axis:
+  * column-parallel: q/k/v projections, MLP up/gate, SSM in_proj
+  * row-parallel:    attention out, MLP down, SSM out_proj
+  * vocab-parallel:  embedding (vocab dim), LM head (vocab dim)
+  * expert-parallel: MoE expert stacks (expert dim over ``model``)
+Batch is sharded over ``("pod", "data")`` (or ``("data",)`` single-pod);
+long-context decode shards KV-cache SEQUENCE over ``data`` (SP).
+ZeRO-1 shards optimizer moments over ``data`` on the first divisible
+replicated dim.
+
+Every rule checks divisibility against the mesh and falls back to
+replication — 40 heterogeneous (arch x shape) cells must all lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.shape]))
+    return mesh.shape.get(axis, 1) if hasattr(mesh.shape, "get") \
+        else mesh.shape[axis]
+
+
+def _try(dim: int, mesh: Mesh, axis):
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    if any(a not in mesh.axis_names for a in axes if a is not None):
+        return None                     # unknown axis (e.g. TP disabled)
+    return axis if dim % max(1, _axis_size(mesh, axis)) == 0 else None
+
+
+# leaf-name → (which dim gets 'model',) using negative indices
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "w1", "in_proj",
+        "bq", "bk", "bv", "b1", "conv_w", "conv_b", "dt_bias",
+        "A_log", "D", "norm_scale"}
+_ROW = {"wo", "w_down", "w2", "out_proj"}
+_REPL = {"ln", "b2", "final_norm", "enc_norm", "router"}
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, model_axis: str = "model",
+               fsdp_axes=None) -> P:
+    name = path[-1]
+    nd = len(shape)
+    spec = [None] * nd
+    if name == "embed":
+        spec[0] = _try(shape[0], mesh, model_axis)        # vocab
+    elif name == "head":
+        spec[-1] = _try(shape[-1], mesh, model_axis)      # vocab
+    elif name in _REPL or name.startswith("ln"):
+        pass
+    elif name in ("w_gate", "w_up", "w_down") and nd >= 4:
+        # MoE expert stack (..., E, d, f): experts over `model`
+        spec[-3] = _try(shape[-3], mesh, model_axis)
+    elif name in _COL:
+        spec[-1] = _try(shape[-1], mesh, model_axis)
+    elif name in _ROW:
+        spec[-2] = _try(shape[-2], mesh, model_axis)
+    if fsdp_axes:
+        # FSDP/ZeRO-3: shard the LARGEST remaining replicated dim over the
+        # data axes (weights gathered per-layer inside the scan)
+        cand = [(shape[i], i) for i in range(nd)
+                if spec[i] is None
+                and shape[i] % _axis_size(mesh, fsdp_axes) == 0
+                and shape[i] > 1]
+        if cand:
+            _, i = max(cand)
+            spec[i] = fsdp_axes
+    return P(*spec)
+
+
+def param_specs(params_shape: Any, mesh: Mesh,
+                model_axis: str = "model", fsdp_axes=None) -> Any:
+    def f(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                      for k in path)
+        return param_spec(names, leaf.shape, mesh, model_axis, fsdp_axes)
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def zero1_specs(params_shape: Any, pspecs: Any, mesh: Mesh,
+                data_axis="data") -> Any:
+    """Optimizer-moment specs: add `data` sharding on the first replicated
+    dim that divides (ZeRO-1). Falls back to the param spec."""
+    def f(leaf, spec):
+        dims = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = {a for d in dims if d is not None
+                for a in (d if isinstance(d, tuple) else (d,))}
+        if data_axis in used:          # FSDP already shards over data
+            return P(*dims)
+        for i, (d, s) in enumerate(zip(leaf.shape, dims)):
+            if s is None and d % _axis_size(mesh, data_axis) == 0 and d > 1:
+                dims[i] = data_axis
+                break
+        return P(*dims)
+    return jax.tree.map(f, params_shape, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh, batch_axes) -> Any:
+    """Shard dim0 (global batch) over the batch mesh axes."""
+    def f(leaf):
+        spec = [None] * len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % _axis_size(mesh, batch_axes) == 0:
+            spec[0] = batch_axes
+        return P(*spec)
+    return jax.tree.map(f, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, batch_axes,
+                model_axis: str = "model",
+                seq_axis: Optional[str] = None) -> Any:
+    """Decode-cache sharding.
+
+    KV leaves are (L, B, S, KH, hd) (or SSM conv (L,B,K,C) / state
+    (L,B,H,P,N)). Priority: batch over batch_axes; KV-heads over `model`;
+    if batch can't shard (e.g. long_500k B=1) shard SEQUENCE over
+    `seq_axis` (sequence parallelism).
+    """
+    bsz = _axis_size(mesh, batch_axes)
+
+    def f(path, leaf):
+        names = tuple(getattr(k, "key", getattr(k, "name", str(k)))
+                      for k in path)
+        name = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if name == "pos":
+            return P(_try(shape[0], mesh, batch_axes) if shape else None)
+        if nd >= 2:
+            spec[1] = _try(shape[1], mesh, batch_axes)    # batch dim
+
+        def seq_spec(dim):
+            """Shard a cache SEQUENCE dim: over `model` when KV heads
+            can't shard (context parallelism), plus `data` for
+            unshardable batch (long-context SP)."""
+            axes = []
+            if spec[1] is None and seq_axis is not None:
+                axes.append(seq_axis)
+            if dim % _axis_size(mesh, tuple(axes + [model_axis])) == 0:
+                axes.append(model_axis)
+            axes = [a for a in axes if dim % _axis_size(mesh, a) == 0]
+            if not axes:
+                return None
+            return tuple(axes) if len(axes) > 1 else axes[0]
+
+        if name in ("k", "v", "cross_k", "cross_v"):      # (L,B,S,KH,hd)
+            spec[3] = _try(shape[3], mesh, model_axis)
+            if spec[3] is None:
+                spec[2] = seq_spec(shape[2])
+            elif spec[1] is None and seq_axis is not None:
+                spec[2] = _try(shape[2], mesh, seq_axis)
+        elif name == "kpos":                              # (L,B,S)
+            pass    # small int32; replicated across model (XLA slices it)
+        elif name == "state":                             # (L,B,H,P,N)
+            spec[2] = _try(shape[2], mesh, model_axis)
+        elif name == "conv":                              # (L,B,K,C)
+            spec[3] = _try(shape[3], mesh, model_axis)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)
+
+
+def to_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,96 @@
+"""End-to-end training loop: model + AdamW + data + checkpoint/restart
++ heartbeat monitoring. Used by examples/ and the integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, DataLoader
+from repro.models.api import build_model
+from repro.models.layers import ModelOptions
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train.fault_tolerance import HeartbeatMonitor
+from repro.train.step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    log_every: int = 10
+    save_every: int = 0              # 0 = no checkpointing
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    resume: bool = True
+
+
+@dataclasses.dataclass
+class FitResult:
+    losses: List[float]
+    steps_done: int
+    resumed_from: Optional[int]
+    step_times: List[float]
+
+
+def fit(cfg: ArchConfig, opts: ModelOptions = None,
+        tcfg: TrainConfig = None, loop: LoopConfig = LoopConfig(),
+        verbose: bool = True) -> FitResult:
+    opts = opts or ModelOptions(dtype=jnp.float32, remat=False)
+    tcfg = tcfg or TrainConfig(adamw=opt.AdamWConfig(
+        lr=1e-3, warmup_steps=max(10, loop.steps // 20),
+        total_steps=loop.steps))
+    api = build_model(cfg, opts)
+    key = jax.random.PRNGKey(loop.seed)
+    params = api.init(key)
+    state = opt.init(params)
+
+    resumed_from = None
+    start_step = 0
+    if loop.ckpt_dir and loop.resume and ckpt.latest_step(loop.ckpt_dir) \
+            is not None:
+        (params, state), start_step = ckpt.restore(
+            loop.ckpt_dir, (params, state))
+        resumed_from = start_step
+
+    step_fn = jax.jit(make_train_step(cfg, opts, tcfg))
+    dcfg = DataConfig(seed=loop.seed, vocab=cfg.vocab,
+                      seq_len=loop.seq_len, global_batch=loop.global_batch)
+    loader = DataLoader(dcfg, start_step=start_step, arch=cfg)
+    monitor = HeartbeatMonitor(n_workers=1)
+
+    losses: List[float] = []
+    times: List[float] = []
+    try:
+        for step, batch in loader:
+            if step >= loop.steps:
+                break
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, state, metrics = step_fn(params, state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            monitor.heartbeat(0, dt)
+            losses.append(loss)
+            times.append(dt)
+            if verbose and (step % loop.log_every == 0
+                            or step == loop.steps - 1):
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):8.3f} "
+                      f"{dt*1e3:7.1f} ms")
+            if loop.save_every and loop.ckpt_dir \
+                    and (step + 1) % loop.save_every == 0:
+                ckpt.save(loop.ckpt_dir, step + 1, (params, state))
+    finally:
+        loader.close()
+    return FitResult(losses=losses, steps_done=len(losses) + start_step,
+                     resumed_from=resumed_from, step_times=times)

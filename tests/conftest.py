@@ -1,0 +1,10 @@
+import os
+
+# smoke tests and benches must see the single real CPU device — the
+# 512-device XLA flag belongs ONLY to repro.launch.dryrun (see spec).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", "")
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

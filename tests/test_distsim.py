@@ -1,0 +1,165 @@
+"""DistSim core behaviour tests (paper §3-§5)."""
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Strategy,
+                        activity_error, batch_time_error)
+from repro.core.events import (Strategy, build_stage_events, flatten_layers,
+                               partition_stages, unique_events)
+from repro.core.profiler import profile_events, profiling_cost
+
+
+@pytest.fixture(scope="module")
+def provider():
+    return AnalyticalProvider(A40_CLUSTER)
+
+
+CFG = get_config("bert_large")
+
+
+def make_sim(provider, mp=2, pp=2, dp=2, m=4, schedule="1f1b", gb=16):
+    return DistSim(CFG, Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
+                                 schedule=schedule), gb, 512, provider)
+
+
+def test_event_dedup_reduces_profiling(provider):
+    """Observation 1: unique events ≪ total instances (Table 3)."""
+    sim = make_sim(provider)
+    rep = sim.profiling_report()
+    assert rep["unique_events"] < rep["total_instances"] / 10
+    assert rep["relative_scale"] < 0.5          # paper: 0.1296
+
+
+def test_events_hashable_and_deduped(provider):
+    stages = build_stage_events(CFG, Strategy(mp=2, pp=2, dp=2,
+                                              microbatches=4), 2, 512, 8)
+    counts = unique_events(stages, Strategy(mp=2, pp=2, dp=2,
+                                            microbatches=4), 8)
+    for e, c in counts.items():
+        assert c >= 1
+        assert hash(e) == hash(e)
+
+
+def test_stage_partition_balanced():
+    layers = flatten_layers(CFG, 2, 512)
+    for pp in (1, 2, 4, 8):
+        stages = partition_stages(layers, pp)
+        assert len(stages) == pp
+        assert sum(len(s.layers) for s in stages) == len(layers)
+        flops = [sum(l.fwd_flops for l in s.layers) for s in stages]
+        assert max(flops) < 2.5 * (sum(flops) / pp)
+
+
+def test_predict_matches_replay_batch_time(provider):
+    """§5.2: <4% batch-time error across strategies."""
+    for mp, pp, dp, m in [(1, 1, 4, 1), (1, 2, 2, 4), (2, 2, 1, 4),
+                          (2, 2, 4, 4), (1, 4, 1, 8)]:
+        sim = make_sim(provider, mp, pp, dp, m)
+        pred = sim.predict()
+        act = sim.replay(seed=0)
+        err = batch_time_error(pred.timeline, act.timeline)
+        assert err < 0.04, f"{mp}M{pp}P{dp}D err={err:.3f}"
+
+
+def test_predict_matches_replay_activity(provider):
+    """§5.3: <5% per-device activity error."""
+    sim = make_sim(provider, 2, 2, 2, 4)
+    pred = sim.predict()
+    act = sim.replay(seed=3)
+    errs = activity_error(pred.timeline, act.timeline)
+    assert errs and max(errs.values()) < 0.05
+
+
+def test_mp_devices_identical(provider):
+    """§5.4 observation: MP rank pairs show the same activity."""
+    sim = make_sim(provider, mp=2, pp=2, dp=1, m=4)
+    tl = sim.predict().timeline
+    by_dev = tl.by_device()
+    for d in range(0, tl.n_devices, 2):
+        a = [(x.name, round(x.start, 9)) for x in by_dev[d]
+             if x.kind in ("F", "B")]
+        b = [(x.name, round(x.start, 9)) for x in by_dev[d + 1]
+             if x.kind in ("F", "B")]
+        assert a == b
+
+
+def test_more_microbatches_fewer_bubbles(provider):
+    frac = []
+    for m in (2, 4, 8, 16):
+        sim = make_sim(provider, mp=1, pp=4, dp=1, m=m, gb=16)
+        frac.append(sim.predict().bubble_fraction)
+    assert frac[-1] < frac[0]
+
+
+def test_schedule_ordering_1f1b_beats_gpipe(provider):
+    g = make_sim(provider, 1, 4, 1, 8, "gpipe").predict()
+    d = make_sim(provider, 1, 4, 1, 8, "1f1b").predict()
+    assert d.batch_time <= g.batch_time * 1.02
+
+
+def test_dp_scaling_increases_throughput(provider):
+    t1 = DistSim(CFG, Strategy(dp=1, microbatches=1), 8, 512,
+                 provider).predict()
+    t4 = DistSim(CFG, Strategy(dp=4, microbatches=1), 8, 512,
+                 provider).predict()
+    assert t4.batch_time < t1.batch_time
+
+
+def test_allreduce_extrapolation_small_error(provider):
+    """§4.2: ≤8-way profile extrapolated to N — <2% effect on the ring
+    formula (exact here by construction; checks the code path)."""
+    from repro.core.events import Event
+    e64 = Event(kind="collective", name="x", coll_op="all_reduce",
+                nbytes=1e8, n_dev=64, scope="inter")
+    t_extrap = provider.time(e64)
+    from repro.core.costmodel import collective_time
+    t_direct = collective_time("all_reduce", 1e8, 64, provider.cluster,
+                               "inter")
+    assert abs(t_extrap - t_direct) / t_direct < 0.02
+
+
+def test_invalid_batch_raises(provider):
+    with pytest.raises(ValueError):
+        DistSim(CFG, Strategy(dp=3, microbatches=5), 16, 512, provider)
+
+
+def test_zero1_changes_sync_events(provider):
+    a = DistSim(CFG, Strategy(dp=4, microbatches=1), 16, 512,
+                provider).predict()
+    b = DistSim(CFG, Strategy(dp=4, microbatches=1, zero1=True), 16, 512,
+                provider).predict()
+    assert abs(a.batch_time - b.batch_time) / a.batch_time < 0.5
+    assert a.batch_time != b.batch_time
+
+
+def test_chrome_trace_export(tmp_path, provider):
+    import json
+    from repro.core.timeline import to_chrome_trace
+    sim = make_sim(provider, 1, 2, 2, 4)
+    tl = sim.predict().timeline
+    path = str(tmp_path / "trace.json")
+    to_chrome_trace(tl, path)
+    data = json.load(open(path))
+    evs = [e for e in data["traceEvents"] if e["ph"] == "X"]
+    assert len(evs) == len(tl.activities)
+    assert all(e["dur"] >= 0 for e in evs)
+
+
+def test_pipedream_schedule_no_sync(provider):
+    """Async pipeline (paper §7): no DP all-reduce events."""
+    s_sync = Strategy(pp=2, dp=2, microbatches=4)
+    s_async = Strategy(pp=2, dp=2, microbatches=4, schedule="pipedream")
+    tl_sync = DistSim(CFG, s_sync, 8, 512, provider).predict().timeline
+    tl_async = DistSim(CFG, s_async, 8, 512, provider).predict().timeline
+    assert any(a.kind == "AR" for a in tl_sync.activities)
+    assert not any(a.kind == "AR" for a in tl_async.activities)
+    assert tl_async.batch_time <= tl_sync.batch_time
+
+
+def test_grad_compression_whatif(provider):
+    """Compression shrinks the DP sync event; DP-bound strategies gain."""
+    a = DistSim(CFG, Strategy(dp=8, microbatches=1), 16, 512,
+                provider).predict()
+    b = DistSim(CFG, Strategy(dp=8, microbatches=1, grad_compress=0.25),
+                16, 512, provider).predict()
+    assert b.batch_time < a.batch_time

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture gets a REDUCED same-family config and runs
+one forward + one train step on CPU, asserting output shapes and
+finiteness. Full configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (SHAPES, ShapeConfig, get_config,
+                                list_archs, smoke_config)
+from repro.models.api import build_model, input_specs, make_batch
+from repro.models.layers import ModelOptions
+from repro.train import optimizer as opt
+from repro.train.step import TrainConfig, make_train_step
+
+OPTS = ModelOptions(dtype=jnp.float32, remat=False)
+SHAPE = ShapeConfig("smoke", 64, 2, "train")
+ARCHS = list_archs(assigned_only=True)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch, key):
+    cfg = smoke_config(get_config(arch))
+    api = build_model(cfg, OPTS)
+    params = api.init(key)
+    batch = make_batch(cfg, SHAPE, key, OPTS)
+    logits = api.forward(params, batch)
+    assert logits.ndim == 3 and logits.shape[0] == 2
+    assert logits.shape[-1] == cfg.vocab
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = api.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # random init ⇒ loss ≈ ln(vocab)
+    assert abs(float(loss) - jnp.log(cfg.vocab)) < 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch, key):
+    cfg = smoke_config(get_config(arch))
+    step = jax.jit(make_train_step(cfg, OPTS, TrainConfig()))
+    api = build_model(cfg, OPTS)
+    params = api.init(key)
+    state = opt.init(params)
+    batch = make_batch(cfg, SHAPE, key, OPTS)
+    new_params, new_state, metrics = step(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_state.step) == 1
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, key):
+    cfg = smoke_config(get_config(arch))
+    api = build_model(cfg, OPTS)
+    params = api.init(key)
+    cache = api.init_cache(2, 32)
+    tok = jnp.array([[3], [7]], jnp.int32)
+    logits, new_cache = api.decode_step(params, cache, {"tokens": tok})
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(new_cache["pos"][0]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_shapes(arch):
+    cfg = get_config(arch)
+    for name in cfg.shapes:
+        shape = SHAPES[name]
+        specs = input_specs(cfg, shape)
+        leaves = jax.tree.leaves(specs)
+        assert leaves, f"{arch}/{name} produced no input specs"
+        for l in leaves:
+            assert isinstance(l, jax.ShapeDtypeStruct)
+
+
+def test_long_500k_only_subquadratic():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        if "long_500k" in cfg.shapes:
+            ok = (cfg.is_attention_free or cfg.hybrid_period
+                  or cfg.sliding_window)
+            assert ok, f"{arch} claims long_500k but is full attention"

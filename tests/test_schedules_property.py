@@ -1,0 +1,81 @@
+"""Property-based tests (hypothesis) for pipeline schedules and the
+timeline constructor's invariants."""
+import hypothesis as hp
+import hypothesis.strategies as st
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim, Strategy
+from repro.core.schedules import build_schedule
+
+CFG = get_config("gpt2_345m")
+PROVIDER = AnalyticalProvider(A40_CLUSTER)
+
+
+@hp.given(pp=st.integers(1, 8), m=st.integers(1, 16),
+          name=st.sampled_from(["gpipe", "1f1b"]))
+@hp.settings(max_examples=40, deadline=None)
+def test_schedule_task_counts(pp, m, name):
+    sched = build_schedule(name, pp, m)
+    assert len(sched) == pp
+    for tasks in sched:
+        fs = [t for t in tasks if t.phase == "F"]
+        bs = [t for t in tasks if t.phase == "B"]
+        assert len(fs) == m and len(bs) == m
+        assert sorted(t.micro for t in fs) == list(range(m))
+        assert sorted(t.micro for t in bs) == list(range(m))
+
+
+@hp.given(pp=st.integers(1, 6), m=st.integers(1, 12), vpp=st.integers(1, 3))
+@hp.settings(max_examples=30, deadline=None)
+def test_interleaved_task_counts(pp, m, vpp):
+    sched = build_schedule("interleaved", pp, m, vpp)
+    for tasks in sched:
+        fs = [t for t in tasks if t.phase == "F"]
+        assert len(fs) == m * vpp
+        assert len(tasks) == 2 * m * vpp
+
+
+@hp.given(pp=st.integers(1, 8), m=st.integers(1, 16))
+@hp.settings(max_examples=30, deadline=None)
+def test_backward_after_forward_same_stage(pp, m):
+    """On every device, B(micro) appears after F(micro)."""
+    for name in ("gpipe", "1f1b"):
+        for tasks in build_schedule(name, pp, m):
+            seen_f = set()
+            for t in tasks:
+                if t.phase == "F":
+                    seen_f.add(t.micro)
+                else:
+                    assert t.micro in seen_f
+
+
+@hp.given(pp=st.sampled_from([1, 2, 4]), dp=st.sampled_from([1, 2]),
+          mp=st.sampled_from([1, 2]),
+          m=st.sampled_from([1, 2, 4]),
+          schedule=st.sampled_from(["gpipe", "1f1b"]))
+@hp.settings(max_examples=20, deadline=None)
+def test_timeline_constructs_without_deadlock(pp, dp, mp, m, schedule):
+    """Any feasible strategy builds a valid timeline: no deadlock, no
+    overlapping compute on one device, batch time ≥ critical stage."""
+    gb = dp * m                         # microbatch size 1
+    sim = DistSim(CFG, Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
+                                schedule=schedule), gb, 128, PROVIDER)
+    res = sim.predict()
+    tl = res.timeline
+    assert tl.batch_time > 0
+    for dev, acts in tl.by_device().items():
+        compute = [a for a in acts if a.kind in ("F", "B", "AR", "OPT")]
+        for a, b in zip(compute, compute[1:]):
+            assert b.start >= a.end - 1e-9, (dev, a, b)
+
+
+@hp.given(m=st.sampled_from([2, 4, 8]), seed=st.integers(0, 5))
+@hp.settings(max_examples=12, deadline=None)
+def test_replay_jitter_bounded(m, seed):
+    """Replay with 2.5% event jitter stays within ~10% of prediction."""
+    sim = DistSim(CFG, Strategy(pp=2, dp=2, microbatches=m), 2 * m, 128,
+                  PROVIDER)
+    pred = sim.predict()
+    act = sim.replay(seed=seed)
+    assert abs(pred.batch_time - act.batch_time) / act.batch_time < 0.10

@@ -1,0 +1,107 @@
+"""Sharding rules: divisibility safety, FSDP/ZeRO-1 invariants."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, smoke_config
+from repro.models.api import build_model
+from repro.models.layers import ModelOptions
+from repro.parallel import sharding
+from repro.train import optimizer as optlib
+
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _axis_names(spec):
+    for s in spec:
+        if s is None:
+            continue
+        for a in (s if isinstance(s, tuple) else (s,)):
+            yield a
+
+
+def _specs_for(arch, fsdp=None, mesh=MESH):
+    cfg = get_config(arch)
+    opts = ModelOptions(dtype=jnp.bfloat16)
+    pshapes = jax.eval_shape(
+        lambda: build_model(cfg, opts).init(jax.random.PRNGKey(0)))
+    return pshapes, sharding.param_specs(pshapes, mesh, fsdp_axes=fsdp)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "mamba2_2_7b",
+                                  "qwen3_moe_30b_a3b", "jamba_v0_1_52b",
+                                  "whisper_tiny"])
+def test_no_duplicate_axes_in_param_specs(arch):
+    pshapes, pspecs = _specs_for(arch, fsdp="data")
+    for spec in jax.tree.leaves(pspecs,
+                                is_leaf=lambda x: isinstance(x, P)):
+        names = list(_axis_names(spec))
+        assert len(names) == len(set(names)), spec
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "dbrx_132b"])
+def test_zero1_never_duplicates_fsdp(arch):
+    pshapes, pspecs = _specs_for(arch, fsdp="data")
+    ostate = jax.eval_shape(optlib.init, pshapes)
+    ospecs = sharding.zero1_specs(ostate, optlib.state_specs(pspecs), MESH)
+    for spec in jax.tree.leaves(ospecs,
+                                is_leaf=lambda x: isinstance(x, P)):
+        names = list(_axis_names(spec))
+        assert len(names) == len(set(names)), spec
+
+
+def test_spec_dims_divide_mesh():
+    """On the production mesh sizes (16, 16), every sharded dim divides."""
+    # fake mesh-shape checks without building 256 devices: use the rule's
+    # own divisibility helper against a mesh-like object
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    fm = FakeMesh()
+    cfg = get_config("mistral_large_123b")
+    opts = ModelOptions(dtype=jnp.bfloat16)
+    pshapes = jax.eval_shape(
+        lambda: build_model(cfg, opts).init(jax.random.PRNGKey(0)))
+
+    def f(path, leaf):
+        names = tuple(getattr(k, "key", str(k)) for k in path)
+        spec = sharding.param_spec(names, leaf.shape, fm,
+                                   fsdp_axes="data")
+        for i, s in enumerate(spec):
+            if s is None:
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            size = 1
+            for a in axes:
+                size *= fm.shape[a]
+            assert leaf.shape[i] % size == 0, (names, leaf.shape, spec)
+        return spec
+
+    jax.tree_util.tree_map_with_path(f, pshapes)
+
+
+def test_cache_specs_long_context_sequence_sharded():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    cfg = smoke_config(get_config("jamba_v0_1_52b"))
+    # synthetic KV leaf: (L, B=1, S, KH=8, hd) — batch unshardable,
+    # kv-heads don't divide 16 ⇒ sequence must shard
+    leaf = jax.ShapeDtypeStruct((4, 1, 8192, 8, 64), jnp.bfloat16)
+    specs = sharding.cache_specs({"k": leaf}, FakeMesh(), ("data",),
+                                 seq_axis="data")
+    spec = specs["k"]
+    assert spec[2] is not None          # sequence sharded
+    assert spec[3] is None              # kv heads replicated
+
+
+def test_batch_specs_shard_dim0():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32),
+             "odd": jax.ShapeDtypeStruct((7, 128), jnp.int32)}
+    specs = sharding.batch_specs(batch, FakeMesh(), ("data",))
+    assert specs["tokens"][0] == ("data",) or specs["tokens"][0] == "data"
+    assert specs["odd"][0] is None      # 7 doesn't divide 16
