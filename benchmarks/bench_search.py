@@ -1,0 +1,101 @@
+"""Strategy-search throughput benchmark (candidates/sec).
+
+Compares three engine configurations on the same grid:
+
+* ``naive``  — per-candidate profiling, no pruning (the seed
+  ``grid_search`` behavior);
+* ``cached`` — shared profile cache, no pruning;
+* ``pruned`` — shared cache + memory filter + work-lower-bound pruning
+  (the production path).
+
+Prints ``name,us_per_call,derived`` CSV like ``benchmarks/run.py``.
+
+    PYTHONPATH=src python benchmarks/bench_search.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.configs.base import get_config, smoke_config
+from repro.core import get_cluster
+from repro.search import SearchEngine, format_report, search_report
+
+
+def run_mode(name, cfg, clusters, devices, gb, seq, grid, share_cache,
+             prune):
+    eng = SearchEngine(cfg, clusters=clusters, share_cache=share_cache,
+                       prune=prune, check_memory=True)
+    res = eng.search(devices, gb, seq, **grid)
+    st = res.stats
+    best = res.best()
+    row = (f"search/{name}", st.wall_time_s * 1e6,
+           f"cand/s={st.candidates_per_s:.1f} "
+           f"evals={st.provider_evaluations} "
+           f"simulated={st.evaluated} pruned={st.pruned_bound} "
+           f"oom={st.pruned_memory} "
+           f"best={best.strategy.label() if best else 'n/a'}")
+    return res, row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + small grid (CI job)")
+    ap.add_argument("--arch", default="bert_exlarge")
+    ap.add_argument("--devices", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--clusters", default="a40-cluster",
+                    help="comma-separated ClusterSpec names")
+    ap.add_argument("--report", action="store_true",
+                    help="print the full search report for 'pruned'")
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = smoke_config(get_config("gpt2_345m"))
+        devices, gb, seq = 16, 16, 128
+        grid = dict(microbatches=(1, 2, 4, 8),
+                    schedules=("1f1b", "gpipe"))
+    else:
+        cfg = get_config(args.arch)
+        devices, gb, seq = args.devices, args.global_batch, args.seq
+        grid = dict(schedules=("1f1b", "gpipe", "interleaved"))
+    clusters = [get_cluster(n) for n in args.clusters.split(",")]
+
+    print("name,us_per_call,derived")
+    rows = []
+    naive_res, row = run_mode("naive", cfg, clusters, devices, gb, seq,
+                              grid, share_cache=False, prune=False)
+    rows.append(row)
+    cached_res, row = run_mode("cached", cfg, clusters, devices, gb, seq,
+                               grid, share_cache=True, prune=False)
+    rows.append(row)
+    pruned_res, row = run_mode("pruned", cfg, clusters, devices, gb, seq,
+                               grid, share_cache=True, prune=True)
+    rows.append(row)
+
+    ne = naive_res.stats.provider_evaluations
+    ce = cached_res.stats.provider_evaluations
+    rows.append(("search/eval_reduction", 0.0,
+                 f"naive/cached={ne / ce if ce else 0.0:.2f}x"))
+    speed = (pruned_res.stats.candidates_per_s
+             / naive_res.stats.candidates_per_s
+             if naive_res.stats.candidates_per_s else 0.0)
+    rows.append(("search/speedup", 0.0,
+                 f"pruned_vs_naive={speed:.2f}x"))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    ok = (naive_res.best() and pruned_res.best()
+          and naive_res.best().strategy == pruned_res.best().strategy)
+    if not ok:
+        print("search/ERROR,0,best strategy mismatch", file=sys.stderr)
+        sys.exit(1)
+    if args.report:
+        print(file=sys.stderr)
+        print(format_report(search_report(pruned_res)), file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

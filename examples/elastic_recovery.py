@@ -13,7 +13,6 @@ from repro.configs.base import get_config, smoke_config
 from repro.core import A40_CLUSTER, AnalyticalProvider, grid_search
 from repro.train.fault_tolerance import (HeartbeatMonitor, replan_mesh,
                                          run_with_recovery)
-from repro.train import checkpoint as ckpt
 from repro.train.train_loop import LoopConfig, fit
 
 

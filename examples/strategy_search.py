@@ -1,16 +1,30 @@
 """Paper §6 use-case: automatic hybrid-parallel strategy search.
 
-Searches (MP, PP, DP, microbatches) for BERT-exLarge on 16 devices
-without touching a cluster, then verifies the top pick against the
-replay oracle — the workflow of Fig. 12 / Table 2.
+Sweeps (MP, PP, DP, microbatches, schedule) for a model WITHOUT touching
+a cluster — the Fig. 12 / Table 2 workflow — using the cached, pruned
+search engine:
 
-    PYTHONPATH=src python examples/strategy_search.py [--devices 16]
+* every candidate shares one profile cache per cluster, so unique
+  events are cost-evaluated once per search, not once per candidate;
+* memory-infeasible candidates are skipped, and candidates whose
+  work lower bound already loses to the best known strategy are pruned
+  before full timeline construction;
+* pass several ``--clusters`` to get per-cluster rankings plus a
+  cross-cluster Pareto frontier over (batch time, HBM headroom,
+  profiling cost) — e.g. "fastest on A40, but v5e leaves 2x the
+  activation headroom".
+
+    PYTHONPATH=src python examples/strategy_search.py \
+        [--devices 16] [--clusters a40-cluster,v5e-pod] [--no-prune]
+
+The top pick is re-checked against the replay oracle (jittered
+discrete-event run), as the paper validates Table 2 on real hardware.
 """
 import argparse
 
 from repro.configs.base import get_config
-from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim,
-                        grid_search)
+from repro.core import DistSim, get_cluster
+from repro.search import SearchEngine, format_report, search_report
 
 
 def main():
@@ -19,36 +33,37 @@ def main():
     ap.add_argument("--global-batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--arch", default="bert_exlarge")
+    ap.add_argument("--clusters", default="a40-cluster",
+                    help="comma-separated ClusterSpec names "
+                         "(a40-cluster, v5e-pod)")
+    ap.add_argument("--no-prune", action="store_true",
+                    help="simulate every candidate (cross-check mode)")
+    ap.add_argument("--top", type=int, default=10)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
-    provider = AnalyticalProvider(A40_CLUSTER)
-    entries = grid_search(cfg, args.devices, args.global_batch, args.seq,
-                          provider=provider,
-                          schedules=("1f1b", "gpipe", "interleaved"))
-    feasible = [e for e in entries if e.feasible]
+    clusters = [get_cluster(n) for n in args.clusters.split(",")]
+    engine = SearchEngine(cfg, clusters=clusters,
+                          prune=not args.no_prune, check_memory=True)
+    result = engine.search(args.devices, args.global_batch, args.seq,
+                           schedules=("1f1b", "gpipe", "interleaved"))
 
     print(f"{args.arch} on {args.devices} devices, "
-          f"global batch {args.global_batch}: "
-          f"{len(feasible)} feasible strategies\n")
-    print(f"{'strategy':14s} {'sched':12s} {'micro':>5s} {'it/s':>8s} "
-          f"{'bubble%':>8s}")
-    for e in feasible[:10]:
-        print(f"{e.strategy.label():14s} {e.strategy.schedule:12s} "
-              f"{e.strategy.microbatches:5d} {e.iters_per_s:8.2f} "
-              f"{e.bubble_fraction*100:8.1f}")
-    worst = feasible[-1]
-    print(f"...\n{'WORST: ' + worst.strategy.label():14s} "
-          f"{worst.strategy.schedule:12s} "
-          f"{worst.strategy.microbatches:5d} {worst.iters_per_s:8.3f}")
-    print(f"\nbest/worst speedup: "
-          f"{worst.batch_time/feasible[0].batch_time:.2f}x "
-          f"(paper found 7.379x)")
+          f"global batch {args.global_batch}, "
+          f"clusters {[c.name for c in clusters]}\n")
+    print(format_report(search_report(result, top=args.top)))
 
-    best = feasible[0]
+    best = result.best()
+    if best is None:
+        print("\nno feasible strategy found")
+        return
+    cluster = next(c for c in clusters if c.name == best.cluster)
+    provider = engine.cache.provider(cluster)
     act = DistSim(cfg, best.strategy, args.global_batch, args.seq,
                   provider).replay(seed=0)
-    print(f"replay-verified best: {1/act.batch_time:.2f} it/s")
+    print(f"\nreplay-verified best ({best.strategy.label()} on "
+          f"{best.cluster}): {1 / act.batch_time:.2f} it/s "
+          f"(predicted {best.iters_per_s:.2f})")
 
 
 if __name__ == "__main__":

@@ -10,17 +10,19 @@ Public API:
 from repro.core.events import Strategy, Event, ComposedEvent
 from repro.core.simulator import DistSim, SimResult
 from repro.core.search import grid_search, SearchEntry
-from repro.core.costmodel import (ClusterSpec, V5E_POD, A40_CLUSTER,
-                                  collective_time, p2p_time)
+from repro.core.costmodel import (ClusterSpec, CLUSTERS, V5E_POD,
+                                  A40_CLUSTER, collective_time,
+                                  get_cluster, p2p_time)
 from repro.core.profiler import (AnalyticalProvider, MeasuredProvider,
-                                 Provider, profiling_cost)
+                                 Provider, ProviderStats, profiling_cost)
 from repro.core.timeline import (Timeline, Activity, batch_time_error,
                                  activity_error, per_stage_error)
 
 __all__ = [
     "DistSim", "SimResult", "Strategy", "Event", "ComposedEvent",
-    "grid_search", "SearchEntry", "ClusterSpec", "V5E_POD", "A40_CLUSTER",
-    "AnalyticalProvider", "MeasuredProvider", "Provider", "profiling_cost",
+    "grid_search", "SearchEntry", "ClusterSpec", "CLUSTERS", "V5E_POD",
+    "A40_CLUSTER", "get_cluster", "AnalyticalProvider", "MeasuredProvider",
+    "Provider", "ProviderStats", "profiling_cost",
     "Timeline", "Activity", "batch_time_error", "activity_error",
     "per_stage_error", "collective_time", "p2p_time",
 ]

@@ -59,6 +59,19 @@ A40_CLUSTER = ClusterSpec(
 )
 
 
+#: name → spec registry, used by the multi-cluster search CLI surfaces
+#: (``--clusters a40-cluster,v5e-pod``).
+CLUSTERS = {c.name: c for c in (V5E_POD, A40_CLUSTER)}
+
+
+def get_cluster(name: str) -> ClusterSpec:
+    try:
+        return CLUSTERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown cluster {name!r}; known: {sorted(CLUSTERS)}") from None
+
+
 def gemm_time(g: GEMM, chip: ChipSpec) -> float:
     """Operator-level roofline with MXU efficiency curve."""
     eff = mxu_efficiency(g.m, g.n, g.k, chip)

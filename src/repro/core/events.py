@@ -13,7 +13,7 @@ from the paper plus our beyond-paper axes (ZeRO-1, EP).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.modelgraph import GEMM, LayerSpec, build_graph
@@ -45,7 +45,11 @@ class Strategy:
 @dataclasses.dataclass(frozen=True)
 class Event:
     kind: str                       # compute | collective | p2p
-    name: str                       # human-readable descriptor
+    # display-only: equality/hashing is the STRUCTURAL signature
+    # (kind, op, sharded shapes, participants, scope) — the paper's
+    # unique-event identity. Two stages' p2p sends of the same payload
+    # are ONE profiling event even though their labels differ.
+    name: str = dataclasses.field(compare=False)
     gemms: Tuple[GEMM, ...] = ()    # compute: sharded GEMM dims
     coll_op: str = ""               # collective: all_reduce | all_gather | ...
     nbytes: float = 0.0             # collective/p2p payload (full tensor)
@@ -179,6 +183,18 @@ def build_stage_events(cfg: ArchConfig, strat: Strategy, microbatch: int,
 # --------------------------------------------------------------------------
 # event universe + dedup accounting (Table 3 metric)
 # --------------------------------------------------------------------------
+
+def stage_event_set(stages: List[Stage]) -> "set[Event]":
+    """Unique compute/comm events across a stage list — the profiling
+    working set a candidate strategy adds to a shared cache."""
+    out: set = set()
+    for st in stages:
+        if st.fwd is not None:
+            out.update(st.fwd.events)
+        if st.bwd is not None:
+            out.update(st.bwd.events)
+    return out
+
 
 def unique_events(stages: List[Stage], strat: Strategy,
                   devices_per_island: int) -> Dict[Event, int]:

@@ -28,10 +28,10 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.costmodel import ClusterSpec, V5E_POD
+from repro.core.costmodel import ClusterSpec
 from repro.core.events import (ComposedEvent, Event, Stage, Strategy,
-                               build_stage_events, flatten_layers,
-                               layer_composed_events, partition_stages)
+                               flatten_layers, layer_composed_events,
+                               partition_stages)
 from repro.core.profiler import Provider
 from repro.core.schedules import build_schedule
 from repro.core.timeline import Activity, Timeline
@@ -72,11 +72,13 @@ def construct_timeline(cfg: ArchConfig, strat: Strategy, global_batch: int,
                        jitter_sigma: float = 0.0,
                        straggler_sigma: float = 0.0,
                        clock_sigma: float = 0.0,
-                       seed: Optional[int] = None) -> Timeline:
+                       seed: Optional[int] = None,
+                       positions: Optional[List[Stage]] = None) -> Timeline:
     cluster = provider.cluster
     m = strat.microbatches
     microbatch = max(1, global_batch // (strat.dp * m))
-    stages = build_positions(cfg, strat, microbatch, seq, cluster)
+    stages = (positions if positions is not None
+              else build_positions(cfg, strat, microbatch, seq, cluster))
     sched = build_schedule(strat.schedule, strat.pp, m, strat.vpp)
     pp, dp, vpp = strat.pp, strat.dp, strat.vpp
     n_pos = len(stages)

@@ -18,25 +18,62 @@ paper notes ("events' time can be stored and reused").
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, Iterable
-
-import numpy as np
 
 from repro.core.costmodel import (ClusterSpec, V5E_POD, collective_time,
                                   compute_time, p2p_time)
 from repro.core.events import Event
 
 
+@dataclasses.dataclass
+class ProviderStats:
+    """Profiling-cost accounting for the search engine.
+
+    ``evaluations`` counts real cost-model evaluations (cache misses) —
+    the quantity the paper's unique-event dedup minimizes; ``hits``
+    counts reuses of an already-profiled event.
+    """
+    evaluations: int = 0
+    hits: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.evaluations + self.hits
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def reset(self) -> None:
+        self.evaluations = 0
+        self.hits = 0
+
+
 class Provider:
     def __init__(self, cluster: ClusterSpec = V5E_POD):
         self.cluster = cluster
         self._cache: Dict[Event, float] = {}
+        self.stats = ProviderStats()
 
     def time(self, e: Event) -> float:
         if e not in self._cache:
             self._cache[e] = self._time(e)
+            self.stats.evaluations += 1
+        else:
+            self.stats.hits += 1
         return self._cache[e]
+
+    def cached_time(self, e: Event) -> float:
+        """Profiled time of an already-cached event, without touching
+        the hit/miss accounting (bookkeeping reads, e.g. the search
+        engine's per-candidate profiling-cost sum)."""
+        return self._cache[e]
+
+    def clear_cache(self) -> None:
+        """Drop profiled event times (stats are kept; reset separately)."""
+        self._cache.clear()
 
     def _time(self, e: Event) -> float:
         if e.kind == "compute":

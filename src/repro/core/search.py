@@ -1,49 +1,25 @@
 """Use-case: automatic hybrid-parallel strategy search (paper §6).
 
-Grid-search over (MP, PP, DP, microbatches, schedule) for a fixed device
-count, scoring each strategy with DistSim — no cluster required. Also
-supports a memory-feasibility filter (HBM capacity) and returns the full
-ranking, matching the paper's Fig. 12 / Table 2 workflow.
+Compatibility surface over :mod:`repro.search` — the subsystem that
+adds a shared profile cache, dominance pruning, and multi-cluster
+Pareto search. ``grid_search`` keeps the seed signature and behavior
+(every candidate fully simulated, one provider, full sorted ranking
+with OOM entries included) so existing callers and the cached-vs-naive
+cross-check tests keep working.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Sequence
 
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import V5E_POD
-from repro.core.events import Strategy
 from repro.core.profiler import AnalyticalProvider, Provider
-from repro.core.simulator import DistSim
+from repro.search.cache import ProfileCache
+from repro.search.engine import SearchEngine, SearchEntry
+from repro.search.prune import estimate_memory, memory_feasible
 
-
-@dataclasses.dataclass
-class SearchEntry:
-    strategy: Strategy
-    batch_time: float
-    iters_per_s: float
-    bubble_fraction: float
-    feasible: bool
-    reason: str = ""
-
-
-def _powers_of_two(n: int) -> List[int]:
-    out, p = [], 1
-    while p <= n:
-        out.append(p)
-        p *= 2
-    return out
-
-
-def memory_feasible(cfg: ArchConfig, strat: Strategy, microbatch: int,
-                    seq: int, hbm_bytes: float) -> bool:
-    """Rough per-device HBM check: params/mp/pp x (w + grad + 2 adam fp32)
-    + activations of one microbatch per live stage."""
-    n = cfg.n_params()
-    state_bytes = n / (strat.mp * strat.pp) * (2 + 2 + 8 / (
-        strat.dp if strat.zero1 else 1))
-    act = 2.0 * microbatch * seq * cfg.d_model * 4   # rough live acts
-    return state_bytes + act < hbm_bytes * 0.92
+__all__ = ["SearchEntry", "grid_search", "memory_feasible",
+           "estimate_memory"]
 
 
 def grid_search(cfg: ArchConfig, n_devices: int, global_batch: int,
@@ -52,32 +28,8 @@ def grid_search(cfg: ArchConfig, n_devices: int, global_batch: int,
                 schedules: Sequence[str] = ("1f1b",),
                 check_memory: bool = False) -> List[SearchEntry]:
     provider = provider or AnalyticalProvider(V5E_POD)
-    entries: List[SearchEntry] = []
-    for mp in _powers_of_two(n_devices):
-        for pp in _powers_of_two(n_devices // mp):
-            dp = n_devices // (mp * pp)
-            if mp * pp * dp != n_devices or global_batch % dp:
-                continue
-            mb_opts = microbatches or sorted({
-                m for m in _powers_of_two(global_batch // dp)
-                if m >= min(pp, global_batch // dp)})
-            for m in mb_opts:
-                if (global_batch // dp) % m:
-                    continue
-                for sch in schedules:
-                    strat = Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
-                                     schedule=sch)
-                    micro = global_batch // (dp * m)
-                    if check_memory and not memory_feasible(
-                            cfg, strat, micro, seq,
-                            provider.cluster.chip.hbm_bytes):
-                        entries.append(SearchEntry(
-                            strat, float("inf"), 0.0, 1.0, False, "OOM"))
-                        continue
-                    res = DistSim(cfg, strat, global_batch, seq,
-                                  provider).predict()
-                    entries.append(SearchEntry(
-                        strat, res.batch_time, res.throughput_iters,
-                        res.bubble_fraction, True))
-    entries.sort(key=lambda e: e.batch_time)
-    return entries
+    engine = SearchEngine(cfg, cache=ProfileCache.from_provider(provider),
+                          prune=False, check_memory=check_memory)
+    result = engine.search(n_devices, global_batch, seq,
+                           microbatches=microbatches, schedules=schedules)
+    return result.entries

@@ -12,12 +12,13 @@ profiling jitter, straggler and clock effects — our stand-in for the real
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.configs.base import ArchConfig
-from repro.core.costmodel import ClusterSpec, V5E_POD
-from repro.core.events import Strategy, build_stage_events, unique_events
-from repro.core.hierarchy import construct_timeline
+from repro.core.costmodel import V5E_POD
+from repro.core.events import (Stage, Strategy, build_stage_events,
+                               unique_events)
+from repro.core.hierarchy import build_positions, construct_timeline
 from repro.core.profiler import (AnalyticalProvider, Provider,
                                  profile_events, profiling_cost)
 from repro.core.timeline import Timeline
@@ -48,21 +49,35 @@ class DistSim:
                 f"dp*microbatches = {strategy.dp * strategy.microbatches}")
 
     # ---- the performance model ----
-    def predict(self) -> SimResult:
+    def predict(self, positions: Optional[List[Stage]] = None) -> SimResult:
         tl = construct_timeline(self.cfg, self.strategy, self.global_batch,
-                                self.seq, self.provider)
+                                self.seq, self.provider, positions=positions)
         return self._result(tl)
 
     # ---- the "actual run" oracle ----
     def replay(self, seed: int = 0, jitter_sigma: float = 0.025,
                straggler_sigma: float = 0.0,
-               clock_sigma: float = 0.0) -> SimResult:
+               clock_sigma: float = 0.0,
+               positions: Optional[List[Stage]] = None) -> SimResult:
         tl = construct_timeline(self.cfg, self.strategy, self.global_batch,
                                 self.seq, self.provider,
                                 jitter_sigma=jitter_sigma,
                                 straggler_sigma=straggler_sigma,
-                                clock_sigma=clock_sigma, seed=seed)
+                                clock_sigma=clock_sigma, seed=seed,
+                                positions=positions)
         return self._result(tl)
+
+    # ---- search-engine hooks ----
+    def microbatch(self) -> int:
+        return max(1, self.global_batch
+                   // (self.strategy.dp * self.strategy.microbatches))
+
+    def positions(self) -> List[Stage]:
+        """Pipeline positions (pp*vpp stages) with composed fwd/bwd
+        events — precompute once, pass to predict()/replay() and the
+        search pruner so candidates don't rebuild the model graph."""
+        return build_positions(self.cfg, self.strategy, self.microbatch(),
+                               self.seq, self.provider.cluster)
 
     def _result(self, tl: Timeline) -> SimResult:
         bt = tl.batch_time

@@ -8,7 +8,7 @@ per-stage timestamp error).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

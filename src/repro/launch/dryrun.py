@@ -16,7 +16,6 @@ The XLA_FLAGS line above MUST run before any other jax-touching import —
 jax locks the device count on first init. Do not move it.
 """
 import argparse
-import json
 import sys
 import time
 import traceback
@@ -30,7 +29,6 @@ from repro.core import roofline
 from repro.core.hw import V5E
 from repro.core.modelgraph import model_flops_per_token
 from repro.launch.mesh import batch_axes, make_production_mesh
-from repro.models import lm
 from repro.models.api import build_model, input_specs
 from repro.models.layers import ModelOptions
 from repro.parallel import sharding

@@ -9,7 +9,7 @@ Decode caches: ring-buffer self-attention KV + precomputed cross K/V.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ Public entry points (used by api.py):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax

@@ -1,0 +1,26 @@
+"""repro.search — cached, pruned, multi-cluster strategy search.
+
+The paper's §6 use-case as a subsystem:
+
+    from repro.search import SearchEngine, search_report
+    engine = SearchEngine(cfg, clusters=[A40_CLUSTER, V5E_POD])
+    result = engine.search(n_devices=64, global_batch=64, seq=512)
+    print(format_report(search_report(result)))
+
+``repro.core.search.grid_search`` remains as the naive-compatible
+wrapper over this engine.
+"""
+from repro.search.cache import ProfileCache
+from repro.search.engine import (SearchEngine, SearchEntry, SearchResult,
+                                 SearchStats, pareto_frontier)
+from repro.search.prune import (estimate_memory, hbm_headroom,
+                                memory_feasible, work_lower_bound)
+from repro.search.report import format_report, search_report
+from repro.search.space import Candidate, enumerate_candidates
+
+__all__ = [
+    "ProfileCache", "SearchEngine", "SearchEntry", "SearchResult",
+    "SearchStats", "pareto_frontier", "estimate_memory", "hbm_headroom",
+    "memory_feasible", "work_lower_bound", "format_report",
+    "search_report", "Candidate", "enumerate_candidates",
+]

@@ -1,0 +1,70 @@
+"""Shared profile/event cache for strategy search.
+
+The paper's core trick (Observation 1): events are identical across
+devices, microbatches — and, crucially for search, across *candidate
+strategies*. Two strategies with the same MP degree share every layer
+compute event; collectives recur across grid points. A ``ProfileCache``
+holds one profiling provider per target cluster and is shared by every
+candidate the engine scores, so each unique event is cost-evaluated
+once per search instead of once per candidate.
+
+Event identity is structural (``Event`` is a frozen dataclass keyed on
+kind/op/sharded shapes/participants/scope), so the provider's dict
+cache IS the unique-event signature cache.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Mapping
+
+from repro.core.costmodel import ClusterSpec
+from repro.core.profiler import AnalyticalProvider, Provider
+
+
+class ProfileCache:
+    """One provider (and thus one event-time cache) per cluster."""
+
+    def __init__(self, providers: Mapping[str, Provider]):
+        self.providers: Dict[str, Provider] = dict(providers)
+
+    @classmethod
+    def for_clusters(cls, clusters: Iterable[ClusterSpec],
+                     provider_factory: Callable[[ClusterSpec], Provider]
+                     = AnalyticalProvider) -> "ProfileCache":
+        return cls({c.name: provider_factory(c) for c in clusters})
+
+    @classmethod
+    def from_provider(cls, provider: Provider) -> "ProfileCache":
+        return cls({provider.cluster.name: provider})
+
+    def provider(self, cluster: ClusterSpec) -> Provider:
+        return self.providers[cluster.name]
+
+    @property
+    def clusters(self) -> list:
+        return [p.cluster for p in self.providers.values()]
+
+    # ---- aggregate accounting across clusters ----
+    @property
+    def evaluations(self) -> int:
+        return sum(p.stats.evaluations for p in self.providers.values())
+
+    @property
+    def hits(self) -> int:
+        return sum(p.stats.hits for p in self.providers.values())
+
+    @property
+    def unique_events(self) -> int:
+        return sum(len(p._cache) for p in self.providers.values())
+
+    def reset_stats(self) -> None:
+        for p in self.providers.values():
+            p.stats.reset()
+
+    def snapshot(self) -> Dict[str, float]:
+        lookups = self.evaluations + self.hits
+        return {
+            "unique_events": self.unique_events,
+            "evaluations": self.evaluations,
+            "hits": self.hits,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+        }

@@ -1,0 +1,213 @@
+"""Cached, pruned, multi-cluster strategy search engine (paper §6).
+
+The naive workflow (seed ``grid_search``) rebuilt and re-profiled the
+full event timeline per candidate. This engine applies the paper's
+unique-event observation to the *search loop*:
+
+* every candidate on a cluster shares one :class:`ProfileCache`
+  provider, so an event appearing in many candidates is cost-evaluated
+  once per search (``share_cache=False`` restores the naive
+  per-candidate profiling for cross-checks and accounting);
+* memory-infeasible candidates are skipped before any simulation, and
+  candidates whose work lower bound already exceeds the best known
+  batch time are pruned before full timeline construction;
+* a list of ``ClusterSpec`` targets yields per-cluster rankings plus a
+  cross-cluster Pareto frontier over (batch_time, HBM headroom,
+  profiling cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.configs.base import ArchConfig
+from repro.core.costmodel import ClusterSpec, V5E_POD
+from repro.core.events import Strategy, stage_event_set
+from repro.core.profiler import AnalyticalProvider, Provider
+from repro.core.simulator import DistSim
+from repro.search.cache import ProfileCache
+from repro.search.prune import (HBM_BUDGET, estimate_memory,
+                                work_lower_bound)
+from repro.search.space import Candidate, enumerate_candidates
+
+
+@dataclasses.dataclass
+class SearchEntry:
+    """One scored candidate. Field order up to ``reason`` is the seed
+    ``repro.core.search.SearchEntry`` layout (positional compat)."""
+    strategy: Strategy
+    batch_time: float               # predicted, or lower bound if pruned
+    iters_per_s: float
+    bubble_fraction: float
+    feasible: bool
+    reason: str = ""
+    cluster: str = ""
+    mem_bytes: float = 0.0
+    hbm_headroom: float = 0.0
+    profile_time_s: float = 0.0     # unique-event profiling cost
+    pruned: bool = False
+
+
+@dataclasses.dataclass
+class SearchStats:
+    candidates: int = 0             # grid points x clusters
+    evaluated: int = 0              # full timeline constructions
+    pruned_memory: int = 0
+    pruned_bound: int = 0
+    provider_evaluations: int = 0   # real cost-model evaluations
+    cache_hits: int = 0
+    wall_time_s: float = 0.0
+
+    @property
+    def candidates_per_s(self) -> float:
+        return self.candidates / self.wall_time_s if self.wall_time_s \
+            else 0.0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    entries: List[SearchEntry]              # all clusters, by batch_time
+    by_cluster: Dict[str, List[SearchEntry]]
+    pareto: List[SearchEntry]
+    stats: SearchStats
+
+    def ranking(self, cluster: Optional[str] = None) -> List[SearchEntry]:
+        """Fully-simulated feasible entries, fastest first (Table 2)."""
+        pool = self.by_cluster.get(cluster, []) if cluster else self.entries
+        return [e for e in pool if e.feasible and not e.pruned]
+
+    def best(self, cluster: Optional[str] = None) -> Optional[SearchEntry]:
+        rank = self.ranking(cluster)
+        return rank[0] if rank else None
+
+
+def pareto_frontier(entries: Sequence[SearchEntry]) -> List[SearchEntry]:
+    """Non-dominated set: minimize batch_time and profile_time_s,
+    maximize hbm_headroom."""
+
+    def dominates(a: SearchEntry, b: SearchEntry) -> bool:
+        no_worse = (a.batch_time <= b.batch_time
+                    and a.profile_time_s <= b.profile_time_s
+                    and a.hbm_headroom >= b.hbm_headroom)
+        better = (a.batch_time < b.batch_time
+                  or a.profile_time_s < b.profile_time_s
+                  or a.hbm_headroom > b.hbm_headroom)
+        return no_worse and better
+
+    return [e for e in entries
+            if not any(dominates(o, e) for o in entries if o is not e)]
+
+
+class SearchEngine:
+    def __init__(self, cfg: ArchConfig,
+                 clusters: Union[ClusterSpec, Sequence[ClusterSpec],
+                                 None] = None,
+                 provider_factory=AnalyticalProvider,
+                 cache: Optional[ProfileCache] = None,
+                 share_cache: bool = True,
+                 prune: bool = True,
+                 check_memory: bool = True):
+        self.cfg = cfg
+        if cache is not None:
+            self.clusters = cache.clusters
+        else:
+            if clusters is None:
+                clusters = (V5E_POD,)
+            elif isinstance(clusters, ClusterSpec):
+                clusters = (clusters,)
+            self.clusters = list(clusters)
+        self.provider_factory = provider_factory
+        self.share_cache = share_cache
+        self.prune = prune
+        self.check_memory = check_memory
+        self.cache = cache if cache is not None else (
+            ProfileCache.for_clusters(self.clusters, provider_factory)
+            if share_cache else None)
+
+    def _provider(self, cluster: ClusterSpec) -> Provider:
+        if self.share_cache:
+            return self.cache.provider(cluster)
+        return self.provider_factory(cluster)   # naive: fresh per candidate
+
+    def search(self, n_devices: int, global_batch: int, seq: int,
+               microbatches: Optional[Sequence[int]] = None,
+               schedules: Sequence[str] = ("1f1b",),
+               zero1_options: Sequence[bool] = (False,)) -> SearchResult:
+        t0 = time.perf_counter()
+        stats = SearchStats()
+        base_evals = self.cache.evaluations if self.share_cache else 0
+        base_hits = self.cache.hits if self.share_cache else 0
+        grid = enumerate_candidates(n_devices, global_batch, microbatches,
+                                    schedules, zero1_options)
+        by_cluster: Dict[str, List[SearchEntry]] = {}
+        for cluster in self.clusters:
+            by_cluster[cluster.name] = self._search_cluster(
+                cluster, grid, global_batch, seq, stats)
+
+        entries = sorted((e for es in by_cluster.values() for e in es),
+                         key=lambda e: e.batch_time)
+        for es in by_cluster.values():
+            es.sort(key=lambda e: e.batch_time)
+        if self.share_cache:
+            stats.provider_evaluations = self.cache.evaluations - base_evals
+            stats.cache_hits = self.cache.hits - base_hits
+        stats.wall_time_s = time.perf_counter() - t0
+        pareto = pareto_frontier(
+            [e for e in entries if e.feasible and not e.pruned])
+        return SearchResult(entries, by_cluster, pareto, stats)
+
+    def _search_cluster(self, cluster: ClusterSpec, grid: List[Candidate],
+                        global_batch: int, seq: int,
+                        stats: SearchStats) -> List[SearchEntry]:
+        entries: List[SearchEntry] = []
+        best_bt: Optional[float] = None
+        budget = cluster.chip.hbm_bytes * HBM_BUDGET
+        for cand in grid:
+            stats.candidates += 1
+            strat, micro = cand.strategy, cand.microbatch
+            mem = estimate_memory(self.cfg, strat, micro, seq)
+            headroom = budget - mem
+            if self.check_memory and headroom <= 0:
+                stats.pruned_memory += 1
+                entries.append(SearchEntry(
+                    strat, float("inf"), 0.0, 1.0, False, "OOM",
+                    cluster=cluster.name, mem_bytes=mem,
+                    hbm_headroom=headroom))
+                continue
+
+            provider = self._provider(cluster)
+            sim = DistSim(self.cfg, strat, global_batch, seq, provider)
+            positions = sim.positions()
+            if self.prune and best_bt is not None:
+                lb = work_lower_bound(positions, strat, provider)
+                if lb >= best_bt:
+                    # batch_time holds a LOWER BOUND, not a prediction;
+                    # feasible=False keeps bounds out of naive
+                    # `[e for e in entries if e.feasible]` rankings
+                    stats.pruned_bound += 1
+                    entries.append(SearchEntry(
+                        strat, lb, 0.0, 0.0, False, "bound", pruned=True,
+                        cluster=cluster.name, mem_bytes=mem,
+                        hbm_headroom=headroom))
+                    if not self.share_cache:
+                        stats.provider_evaluations += \
+                            provider.stats.evaluations
+                        stats.cache_hits += provider.stats.hits
+                    continue
+
+            res = sim.predict(positions=positions)
+            stats.evaluated += 1
+            ptime = sum(provider.cached_time(e)
+                        for e in stage_event_set(positions))
+            entries.append(SearchEntry(
+                strat, res.batch_time, res.throughput_iters,
+                res.bubble_fraction, True,
+                cluster=cluster.name, mem_bytes=mem,
+                hbm_headroom=headroom, profile_time_s=ptime))
+            if best_bt is None or res.batch_time < best_bt:
+                best_bt = res.batch_time
+            if not self.share_cache:
+                stats.provider_evaluations += provider.stats.evaluations
+                stats.cache_hits += provider.stats.hits
+        return entries

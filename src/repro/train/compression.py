@@ -11,7 +11,7 @@ Error feedback (residual accumulation) keeps convergence unbiased.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Strategy,
                         activity_error, batch_time_error)
 from repro.core.events import (Strategy, build_stage_events, flatten_layers,
                                partition_stages, unique_events)
-from repro.core.profiler import profile_events, profiling_cost
 
 
 @pytest.fixture(scope="module")

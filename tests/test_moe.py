@@ -1,10 +1,12 @@
 """MoE: gather implementation vs dense-dispatch reference + invariants."""
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import MoEConfig
 from repro.models.moe import (capacity, moe_dense_dispatch, moe_gather,

@@ -1,8 +1,9 @@
 """Property-based tests (hypothesis) for pipeline schedules and the
 timeline constructor's invariants."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.configs.base import get_config
 from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim, Strategy

@@ -1,0 +1,160 @@
+"""Search-engine tests: cache-hit accounting, pruning soundness,
+naive-vs-cached equivalence (paper §6 / Table 2 workflow)."""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.configs.base import get_config, smoke_config
+from repro.core import (A40_CLUSTER, V5E_POD, AnalyticalProvider, DistSim,
+                        get_cluster, grid_search)
+from repro.core.events import Event
+from repro.search import (ProfileCache, SearchEngine, enumerate_candidates,
+                          format_report, pareto_frontier, search_report,
+                          work_lower_bound)
+
+CFG = smoke_config(get_config("gpt2_345m"))
+GRID = dict(microbatches=(1, 2, 4, 8), schedules=("1f1b", "gpipe"))
+
+
+def _engine(**kw):
+    defaults = dict(clusters=A40_CLUSTER, prune=False, check_memory=False)
+    defaults.update(kw)
+    return SearchEngine(CFG, **defaults)
+
+
+@pytest.mark.search
+def test_cached_matches_naive_on_64_device_grid():
+    """Acceptance: the shared profile cache does ≥5x fewer provider cost
+    evaluations than per-candidate profiling, with identical results."""
+    naive = _engine(share_cache=False).search(64, 64, 128, **GRID)
+    cached = _engine(share_cache=True).search(64, 64, 128, **GRID)
+
+    assert naive.stats.candidates == cached.stats.candidates > 100
+    assert cached.stats.provider_evaluations > 0
+    assert naive.stats.provider_evaluations \
+        >= 5 * cached.stats.provider_evaluations
+
+    # identical best strategy and identical full ranking
+    assert cached.best().strategy == naive.best().strategy
+    assert [e.strategy for e in cached.entries] \
+        == [e.strategy for e in naive.entries]
+    for a, b in zip(naive.entries, cached.entries):
+        assert math.isclose(a.batch_time, b.batch_time, rel_tol=1e-12)
+
+
+@pytest.mark.search
+def test_cache_hit_accounting_repeat_search_profiles_nothing():
+    """Second search over the same grid hits the cache for every event:
+    0 new profiler evaluations."""
+    eng = _engine(share_cache=True)
+    first = eng.search(16, 16, 128, **GRID)
+    assert first.stats.provider_evaluations > 0
+    again = eng.search(16, 16, 128, **GRID)
+    assert again.stats.provider_evaluations == 0
+    assert again.stats.cache_hits > 0
+    # a new schedule reuses the event universe too (schedules reorder
+    # events, they don't create new ones)
+    sched = eng.search(16, 16, 128, microbatches=(1, 2, 4, 8),
+                       schedules=("interleaved",))
+    assert sched.stats.provider_evaluations == 0
+
+
+def test_work_lower_bound_is_sound():
+    """The per-device serial-work bound never exceeds the simulated
+    batch time."""
+    provider = AnalyticalProvider(A40_CLUSTER)
+    for cand in enumerate_candidates(16, 16, **GRID):
+        sim = DistSim(CFG, cand.strategy, 16, 128, provider)
+        positions = sim.positions()
+        lb = work_lower_bound(positions, cand.strategy, provider)
+        bt = sim.predict(positions=positions).batch_time
+        assert lb <= bt * (1 + 1e-9), cand.label()
+
+
+def test_pruning_soundness_no_pruned_candidate_beats_best():
+    pruned = _engine(prune=True).search(16, 16, 128, **GRID)
+    full = _engine(prune=False).search(16, 16, 128, **GRID)
+    assert pruned.stats.pruned_bound > 0
+    best = pruned.best()
+    # pruning never changes the winner
+    assert best.strategy == full.best().strategy
+    # every pruned candidate, fully simulated, is no better than best
+    provider = AnalyticalProvider(A40_CLUSTER)
+    for e in pruned.entries:
+        if e.pruned:
+            bt = DistSim(CFG, e.strategy, 16, 128,
+                         provider).predict().batch_time
+            assert bt >= best.batch_time * (1 - 1e-9)
+            assert bt >= e.batch_time * (1 - 1e-9)   # entry holds a LB
+
+
+def test_memory_pruning_marks_oom_infeasible():
+    tiny_chip = dataclasses.replace(A40_CLUSTER.chip, hbm_bytes=1e4)
+    tiny = dataclasses.replace(A40_CLUSTER, name="tiny", chip=tiny_chip)
+    res = SearchEngine(CFG, clusters=tiny, prune=False,
+                       check_memory=True).search(4, 8, 128)
+    assert res.stats.pruned_memory == res.stats.candidates
+    assert res.stats.evaluated == 0
+    assert all(not e.feasible and e.reason == "OOM" for e in res.entries)
+
+
+def test_multi_cluster_search_and_pareto():
+    res = SearchEngine(CFG, clusters=[A40_CLUSTER, V5E_POD],
+                       check_memory=True).search(16, 16, 128, **GRID)
+    assert set(res.by_cluster) == {"a40-cluster", "v5e-pod"}
+    assert res.best("a40-cluster") is not None
+    assert res.best("v5e-pod") is not None
+    assert res.pareto
+    ranking = res.ranking()
+    # global best is never dominated
+    assert any(e.strategy == ranking[0].strategy
+               and e.cluster == ranking[0].cluster for e in res.pareto)
+    # frontier members are mutually non-dominated (fixpoint)
+    assert pareto_frontier(res.pareto) == res.pareto
+
+
+def test_search_report_json_and_format():
+    res = _engine(prune=True).search(16, 16, 128, **GRID)
+    rep = search_report(res, top=5)
+    json.dumps(rep)                       # serializable
+    assert rep["best"]["rank"] == 1
+    assert len(rep["ranking"]) <= 5
+    assert rep["search"]["candidates"] == res.stats.candidates
+    text = format_report(rep)
+    assert rep["best"]["strategy"] in text
+    assert "Pareto" in text or not rep["pareto"]
+
+
+def test_grid_search_compat_delegates_to_engine():
+    provider = AnalyticalProvider(A40_CLUSTER)
+    entries = grid_search(CFG, 16, 16, 128, provider=provider)
+    assert entries == sorted(entries, key=lambda e: e.batch_time)
+    assert all(e.feasible and not e.pruned for e in entries)
+    best = _engine(share_cache=True).search(16, 16, 128).best()
+    assert entries[0].strategy == best.strategy
+
+
+def test_event_identity_is_structural():
+    """Unique-event signature: labels don't split the cache."""
+    a = Event(kind="p2p", name="p2p:f:pos0", nbytes=1e6, scope="intra")
+    b = Event(kind="p2p", name="p2p:b:pos7", nbytes=1e6, scope="intra")
+    assert a == b and hash(a) == hash(b)
+    provider = AnalyticalProvider(A40_CLUSTER)
+    provider.time(a)
+    provider.time(b)
+    assert provider.stats.evaluations == 1
+    assert provider.stats.hits == 1
+
+
+def test_profile_cache_snapshot_and_registry():
+    cache = ProfileCache.for_clusters([A40_CLUSTER, V5E_POD])
+    assert get_cluster("a40-cluster") is A40_CLUSTER
+    with pytest.raises(ValueError):
+        get_cluster("nope")
+    snap = cache.snapshot()
+    assert snap["evaluations"] == 0 and snap["unique_events"] == 0
+    cache.provider(A40_CLUSTER).time(
+        Event(kind="p2p", name="x", nbytes=1e3))
+    assert cache.snapshot()["unique_events"] == 1

@@ -9,10 +9,7 @@
 """
 import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config, smoke_config
 from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim,

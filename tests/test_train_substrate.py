@@ -2,12 +2,14 @@
 import os
 import tempfile
 
-import hypothesis as hp
-import hypothesis.strategies as st
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.pipeline import DataConfig, DataLoader, synth_batch
 from repro.train import checkpoint as ckpt
