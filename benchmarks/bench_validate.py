@@ -1,0 +1,93 @@
+"""Paper-fidelity validation sweep entry point (CI: validate-smoke job).
+
+Runs predict() vs multi-seed replay() over the accuracy matrix, writes
+``validation_report.json`` (uploaded as a CI artifact), prints the
+pass/fail table, and exits non-zero if any non-xfail cell exceeds the
+paper's §5 thresholds.
+
+    PYTHONPATH=src python benchmarks/bench_validate.py --smoke
+    PYTHONPATH=src python benchmarks/bench_validate.py --full --seeds 0,1,2,3
+    PYTHONPATH=src python benchmarks/bench_validate.py --update-goldens
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+from repro.validate import (Thresholds, full_matrix, run_sweep,
+                            smoke_matrix)
+from repro.validate.report import format_validation_report, save
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
+                           "goldens", "validation_smoke.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    matrix = ap.add_mutually_exclusive_group()
+    matrix.add_argument("--smoke", action="store_true",
+                        help="CI matrix (models x schedules x strategies;"
+                             " the default)")
+    matrix.add_argument("--full", action="store_true",
+                        help="nightly-scale cross product")
+    ap.add_argument("--seeds", default="0,1,2",
+                    help="comma-separated replay seeds")
+    ap.add_argument("--cluster", default="a40-cluster")
+    ap.add_argument("--jitter", type=float, default=0.025,
+                    help="replay per-event jitter sigma")
+    ap.add_argument("--batch-time-threshold", type=float, default=None)
+    ap.add_argument("--activity-threshold", type=float, default=None)
+    ap.add_argument("--out", default="validation_report.json",
+                    help="report path ('' to skip writing)")
+    ap.add_argument("--update-goldens", action="store_true",
+                    help=f"rewrite {os.path.normpath(GOLDEN_PATH)}")
+    args = ap.parse_args()
+    if args.update_goldens and (
+            args.full or args.seeds != "0,1,2"
+            or args.cluster != "a40-cluster" or args.jitter != 0.025
+            or args.batch_time_threshold is not None
+            or args.activity_threshold is not None):
+        ap.error("--update-goldens pins the smoke matrix with default "
+                 "seeds/cluster/jitter/thresholds — tests/"
+                 "test_validation.py hard-codes them; drop the overrides")
+
+    cells = full_matrix() if args.full else smoke_matrix()
+    seeds = tuple(int(s) for s in args.seeds.split(","))
+    thr = Thresholds()
+    if args.batch_time_threshold is not None:
+        thr = dataclasses.replace(
+            thr, batch_time=args.batch_time_threshold,
+            batch_time_worst=1.5 * args.batch_time_threshold)
+    if args.activity_threshold is not None:
+        thr = dataclasses.replace(thr, activity=args.activity_threshold)
+
+    t0 = time.perf_counter()
+    result = run_sweep(cells, cluster=args.cluster, seeds=seeds,
+                       thresholds=thr, jitter_sigma=args.jitter)
+    wall = time.perf_counter() - t0
+
+    print(format_validation_report(result))
+    print(f"\nswept {len(result.cells)} cells x {len(seeds)} seeds "
+          f"in {wall:.2f}s ({len(result.cells) / wall:.1f} cells/s)")
+
+    if args.update_goldens:
+        path = os.path.normpath(GOLDEN_PATH)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        save(result, path)
+        print(f"goldens written to {path}")
+    if args.out:
+        save(result, args.out)
+        print(f"report written to {args.out}")
+
+    if not result.passed:
+        fails = ", ".join(c.cell.label() for c in result.failures)
+        print(f"validate/ERROR: thresholds exceeded on {fails}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

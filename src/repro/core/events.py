@@ -41,6 +41,15 @@ class Strategy:
     def label(self) -> str:
         return f"{self.mp}M{self.pp}P{self.dp}D"
 
+    # ---- JSON round-trip (repro.validate reports, goldens) ----
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Strategy":
+        from repro.core.serde import dataclass_from_dict
+        return dataclass_from_dict(cls, d)
+
 
 @dataclasses.dataclass(frozen=True)
 class Event:

@@ -1,0 +1,13 @@
+"""Shared dataclass↔dict round-trip helpers (validation reports,
+goldens, search artifacts)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+def dataclass_from_dict(cls, d: dict):
+    """Construct ``cls`` from a dict, ignoring unknown keys — the one
+    place that defines how report dicts rehydrate, so schema-migration
+    behavior changes in exactly one spot."""
+    fields = {f.name for f in dataclasses.fields(cls)}
+    return cls(**{k: v for k, v in d.items() if k in fields})

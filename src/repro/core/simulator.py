@@ -67,6 +67,22 @@ class DistSim:
                                 positions=positions)
         return self._result(tl)
 
+    # ---- conformance hook (repro.validate) ----
+    def predict_and_replay(self, seeds=(0,), jitter_sigma: float = 0.025,
+                           straggler_sigma: float = 0.0,
+                           clock_sigma: float = 0.0):
+        """One prediction plus a replay per seed, all sharing a single
+        positions build — the per-cell unit of the accuracy sweep.
+        Returns ``(pred, [replay_0, ...])``."""
+        positions = self.positions()
+        pred = self.predict(positions=positions)
+        replays = [self.replay(seed=s, jitter_sigma=jitter_sigma,
+                               straggler_sigma=straggler_sigma,
+                               clock_sigma=clock_sigma,
+                               positions=positions)
+                   for s in seeds]
+        return pred, replays
+
     # ---- search-engine hooks ----
     def microbatch(self) -> int:
         return max(1, self.global_batch

@@ -8,7 +8,7 @@ per-stage timestamp error).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,11 +48,22 @@ class Timeline:
                    if a.device == device and a.kind in kinds)
 
     def utilization(self) -> Dict[int, float]:
-        bt = self.batch_time or 1.0
+        """Per-device busy fraction. Devices with no activities — e.g.
+        degenerate pp stages that got no layers and hence no OPT events —
+        report 0.0, including on a fully empty timeline (batch_time 0)."""
+        bt = self.batch_time
+        if bt <= 0.0:
+            return {d: 0.0 for d in range(self.n_devices)}
         return {d: self.busy_time(d) / bt for d in range(self.n_devices)}
 
-    def bubble_fraction(self) -> float:
-        util = self.utilization()
+    def bubble_fraction(self, util: Optional[Dict[int, float]] = None
+                        ) -> float:
+        """Idle fraction averaged over devices; pass a precomputed
+        ``utilization()`` map to avoid recomputing it."""
+        if not self.activities:
+            return 0.0          # nothing scheduled — no bubbles either
+        if util is None:
+            util = self.utilization()
         return 1.0 - sum(util.values()) / max(1, len(util))
 
     def compute_index(self) -> Dict[Tuple[int, str], Activity]:
@@ -66,38 +77,106 @@ class Timeline:
 # --------------------------------------------------------------------------
 
 def batch_time_error(pred: Timeline, actual: Timeline) -> float:
-    """§5.2 relative iteration-time error."""
+    """§5.2 relative iteration-time error. A zero-length oracle against
+    a non-trivial prediction (or vice versa) is infinite error, not
+    perfect agreement — a degenerate replay must trip the fidelity
+    gate, not sail through it."""
     at = actual.batch_time
-    return abs(pred.batch_time - at) / at if at else 0.0
+    if at == 0.0:
+        return 0.0 if pred.batch_time == 0.0 else float("inf")
+    return abs(pred.batch_time - at) / at
+
+
+def _compute_pairs(pred: Timeline, actual: Timeline
+                   ) -> List[Tuple[Tuple[int, str], Activity, Activity]]:
+    """Matched (key, predicted, actual) compute activities."""
+    ai = actual.compute_index()
+    return [(key, p, ai[key]) for key, p in pred.compute_index().items()
+            if key in ai]
+
+
+def _timestamp_errors(pairs, bt: float) -> Dict[Tuple[int, str], float]:
+    return {key: 0.5 * (abs(p.start - a.start) + abs(p.end - a.end)) / bt
+            for key, p, a in pairs}
+
+
+def _duration_errors(pairs, bt: float) -> Dict[Tuple[int, str], float]:
+    return {key: abs(p.dur - a.dur) / bt for key, p, a in pairs}
+
+
+def _device_means(errs: Dict[Tuple[int, str], float]) -> Dict[int, float]:
+    per_dev: Dict[int, List[float]] = {}
+    for (d, _), v in errs.items():
+        per_dev.setdefault(d, []).append(v)
+    return {d: sum(v) / len(v) for d, v in per_dev.items()}
 
 
 def activity_error(pred: Timeline, actual: Timeline) -> Dict[int, float]:
     """§5.3: per-device mean |timestamp bias| of compute events,
     normalized by actual batch time."""
-    ai = actual.compute_index()
-    bt = actual.batch_time or 1.0
-    per_dev: Dict[int, List[float]] = {}
-    for key, p in pred.compute_index().items():
-        a = ai.get(key)
-        if a is None:
-            continue
-        err = 0.5 * (abs(p.start - a.start) + abs(p.end - a.end)) / bt
-        per_dev.setdefault(key[0], []).append(err)
-    return {d: sum(v) / len(v) for d, v in per_dev.items() if v}
+    return _device_means(per_stage_error(pred, actual))
 
 
 def per_stage_error(pred: Timeline, actual: Timeline
                     ) -> Dict[Tuple[int, str], float]:
     """§5.4: per (device, F/B:stage:micro) timestamp error."""
-    ai = actual.compute_index()
     bt = actual.batch_time or 1.0
-    out = {}
-    for key, p in pred.compute_index().items():
-        a = ai.get(key)
-        if a is not None:
-            out[key] = 0.5 * (abs(p.start - a.start)
-                              + abs(p.end - a.end)) / bt
-    return out
+    return _timestamp_errors(_compute_pairs(pred, actual), bt)
+
+
+def activity_duration_error(pred: Timeline, actual: Timeline
+                            ) -> Dict[int, float]:
+    """Per-device mean |duration| error of compute events, normalized by
+    actual batch time — isolates event-time misprediction from schedule
+    placement drift (which `activity_error` mixes in via timestamps)."""
+    bt = actual.batch_time or 1.0
+    return _device_means(_duration_errors(_compute_pairs(pred, actual), bt))
+
+
+def _util_delta(pu: Dict[int, float], au: Dict[int, float]
+                ) -> Dict[int, float]:
+    return {d: abs(pu.get(d, 0.0) - au.get(d, 0.0))
+            for d in set(pu) | set(au)}
+
+
+def utilization_delta(pred: Timeline, actual: Timeline) -> Dict[int, float]:
+    """Per-device |predicted − actual| busy fraction."""
+    return _util_delta(pred.utilization(), actual.utilization())
+
+
+def _mean_max(vals) -> Tuple[float, float]:
+    vals = list(vals)
+    if not vals:
+        return 0.0, 0.0
+    return sum(vals) / len(vals), max(vals)
+
+
+def error_summary(pred: Timeline, actual: Timeline) -> Dict[str, float]:
+    """All paper §5 conformance metrics for one predict-vs-replay pair,
+    as a flat dict — the per-cell payload of ``repro.validate``. The
+    compute-activity match and the utilization maps are each built once
+    and shared across the derived metrics."""
+    bt = actual.batch_time or 1.0
+    pairs = _compute_pairs(pred, actual)
+    stage = _timestamp_errors(pairs, bt)
+    act_mean, act_max = _mean_max(_device_means(stage).values())
+    stg_mean, stg_max = _mean_max(stage.values())
+    dur_mean, dur_max = _mean_max(
+        _device_means(_duration_errors(pairs, bt)).values())
+    pu, au = pred.utilization(), actual.utilization()
+    _, util_max = _mean_max(_util_delta(pu, au).values())
+    return {
+        "batch_time_error": batch_time_error(pred, actual),
+        "activity_error_mean": act_mean,
+        "activity_error_max": act_max,
+        "stage_error_mean": stg_mean,
+        "stage_error_max": stg_max,
+        "duration_error_mean": dur_mean,
+        "duration_error_max": dur_max,
+        "utilization_delta_max": util_max,
+        "bubble_delta": abs(pred.bubble_fraction(pu)
+                            - actual.bubble_fraction(au)),
+    }
 
 
 def to_chrome_trace(tl: Timeline, path: str) -> None:

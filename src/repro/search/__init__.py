@@ -15,12 +15,12 @@ from repro.search.engine import (SearchEngine, SearchEntry, SearchResult,
                                  SearchStats, pareto_frontier)
 from repro.search.prune import (estimate_memory, hbm_headroom,
                                 memory_feasible, work_lower_bound)
-from repro.search.report import format_report, search_report
+from repro.search.report import format_report, format_table, search_report
 from repro.search.space import Candidate, enumerate_candidates
 
 __all__ = [
     "ProfileCache", "SearchEngine", "SearchEntry", "SearchResult",
     "SearchStats", "pareto_frontier", "estimate_memory", "hbm_headroom",
     "memory_feasible", "work_lower_bound", "format_report",
-    "search_report", "Candidate", "enumerate_candidates",
+    "format_table", "search_report", "Candidate", "enumerate_candidates",
 ]

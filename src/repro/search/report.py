@@ -3,13 +3,28 @@
 ``search_report`` turns a :class:`SearchResult` into a plain dict
 (JSON-serializable) consumed by ``examples/strategy_search.py`` and
 ``benchmarks/bench_search.py``; ``format_report`` renders it for a
-terminal.
+terminal. ``format_table`` is the shared column renderer, also used by
+``repro.validate.report``.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.search.engine import SearchEntry, SearchResult
+
+
+def format_table(headers: Sequence[str], rows: Sequence[Sequence],
+                 aligns: Optional[Sequence[str]] = None) -> List[str]:
+    """Render a padded text table: header line + one line per row.
+    ``aligns`` is per-column ``"<"``/``">"`` (default: right)."""
+    cells = [[str(c) for c in row] for row in rows]
+    aligns = list(aligns) if aligns else [">"] * len(headers)
+    widths = [max(len(h), *(len(r[i]) for r in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    def line(row):
+        return " ".join(f"{c:{a}{w}s}"
+                        for c, a, w in zip(row, aligns, widths)).rstrip()
+    return [line(list(headers))] + [line(r) for r in cells]
 
 
 def _row(rank: int, e: SearchEntry) -> Dict:
@@ -76,15 +91,14 @@ def format_report(report: Dict) -> str:
         f"profiling: {s['provider_evaluations']} cost evaluations, "
         f"{s['cache_hits']} cache hits")
     lines.append("")
-    hdr = (f"{'rank':>4s} {'strategy':12s} {'sched':10s} {'micro':>5s} "
-           f"{'cluster':12s} {'it/s':>8s} {'bubble%':>8s} {'hbm GB':>7s}")
-    lines.append(hdr)
-    for r in report["ranking"]:
-        lines.append(
-            f"{r['rank']:4d} {r['strategy']:12s} {r['schedule']:10s} "
-            f"{r['microbatches']:5d} {r['cluster']:12s} "
-            f"{r['iters_per_s']:8.2f} {r['bubble_pct']:8.1f} "
-            f"{r['hbm_headroom_gb']:7.1f}")
+    lines.extend(format_table(
+        ["rank", "strategy", "sched", "micro", "cluster", "it/s",
+         "bubble%", "hbm GB"],
+        [[r["rank"], r["strategy"], r["schedule"], r["microbatches"],
+          r["cluster"], f"{r['iters_per_s']:.2f}",
+          f"{r['bubble_pct']:.1f}", f"{r['hbm_headroom_gb']:.1f}"]
+         for r in report["ranking"]],
+        aligns=(">", "<", "<", ">", "<", ">", ">", ">")))
     if report["worst"]:
         w = report["worst"]
         lines.append(

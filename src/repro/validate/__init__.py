@@ -1,0 +1,29 @@
+"""repro.validate — paper-fidelity accuracy sweep (predict vs replay).
+
+The regression backbone for DistSim's headline claim (<4% batch-time
+error, <5% per-device activity error, paper §5):
+
+    from repro.validate import run_sweep, smoke_matrix
+    from repro.validate.report import dump, format_validation_report
+
+    result = run_sweep(smoke_matrix(), seeds=(0, 1, 2))
+    print(format_validation_report(result))
+    assert result.passed
+
+``benchmarks/bench_validate.py --smoke`` wraps this for CI;
+``tests/test_validation.py`` is the tier-1 gate with goldens under
+``tests/goldens/``.
+"""
+from repro.validate.metrics import CellMetrics, aggregate, compare_timelines
+from repro.validate.report import (dump, dumps, format_validation_report,
+                                   load, load_path, save)
+from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
+                                  ValidationCell, full_matrix, run_cell,
+                                  run_sweep, smoke_matrix)
+
+__all__ = [
+    "CellMetrics", "aggregate", "compare_timelines",
+    "dump", "dumps", "format_validation_report", "load", "load_path",
+    "save", "CellResult", "SweepResult", "Thresholds", "ValidationCell",
+    "full_matrix", "run_cell", "run_sweep", "smoke_matrix",
+]

@@ -1,0 +1,57 @@
+"""Per-cell conformance metrics (paper §5).
+
+A :class:`CellMetrics` is one predict-vs-replay comparison reduced to
+the paper's evaluation numbers: batch-time error (§5.2, target <4%),
+per-device activity-time error (§5.3, target <5%), per-stage timestamp
+error (§5.4), plus duration/utilization/bubble deltas that localize a
+regression (schedule drift vs event-time drift). Multi-seed replays
+aggregate field-wise (mean), with the worst seed's batch-time error
+kept so a single bad draw can't hide in the average.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+from repro.core.serde import dataclass_from_dict
+from repro.core.timeline import Timeline, error_summary
+
+
+@dataclasses.dataclass(frozen=True)
+class CellMetrics:
+    batch_time_error: float = 0.0
+    activity_error_mean: float = 0.0
+    activity_error_max: float = 0.0
+    stage_error_mean: float = 0.0
+    stage_error_max: float = 0.0
+    duration_error_mean: float = 0.0
+    duration_error_max: float = 0.0
+    utilization_delta_max: float = 0.0
+    bubble_delta: float = 0.0
+    worst_batch_time_error: float = 0.0
+
+    def to_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, float]) -> "CellMetrics":
+        return dataclass_from_dict(cls, d)
+
+
+def compare_timelines(pred: Timeline, actual: Timeline) -> CellMetrics:
+    """Metrics for one (prediction, replay) pair."""
+    s = error_summary(pred, actual)
+    return CellMetrics(worst_batch_time_error=s["batch_time_error"], **s)
+
+
+def aggregate(per_seed: Sequence[CellMetrics]) -> CellMetrics:
+    """Field-wise mean over seeds; ``worst_batch_time_error`` takes the
+    max so the aggregate still exposes the worst single replay."""
+    if not per_seed:
+        return CellMetrics()
+    n = len(per_seed)
+    fields = [f.name for f in dataclasses.fields(CellMetrics)]
+    means = {f: sum(getattr(m, f) for m in per_seed) / n for f in fields}
+    means["worst_batch_time_error"] = max(m.worst_batch_time_error
+                                          for m in per_seed)
+    return CellMetrics(**means)

@@ -71,6 +71,46 @@ def test_timeline_constructs_without_deadlock(pp, dp, mp, m, schedule):
             assert b.start >= a.end - 1e-9, (dev, a, b)
 
 
+@hp.given(pp=st.integers(1, 6), m=st.integers(1, 12), vpp=st.integers(1, 3),
+          name=st.sampled_from(["gpipe", "1f1b", "interleaved"]))
+@hp.settings(max_examples=40, deadline=None)
+def test_task_instances_unique_per_stage(pp, m, vpp, name):
+    """Invariant: every (phase, micro, chunk) appears exactly once per
+    stage — duplicated or dropped tasks would silently skew both the
+    model and the replay oracle."""
+    for tasks in build_schedule(name, pp, m, vpp):
+        keys = [(t.phase, t.micro, t.chunk) for t in tasks]
+        assert len(keys) == len(set(keys))
+
+
+@hp.given(pp=st.integers(1, 8), m=st.integers(1, 16))
+@hp.settings(max_examples=40, deadline=None)
+def test_1f1b_in_flight_bounded(pp, m):
+    """1F1B's point: at most min(pp, m) microbatches in flight per
+    stage (GPipe holds all m) — bounds activation memory."""
+    for tasks in build_schedule("1f1b", pp, m):
+        in_flight = peak = 0
+        for t in tasks:
+            in_flight += 1 if t.phase == "F" else -1
+            peak = max(peak, in_flight)
+        assert peak <= min(pp, m)
+        assert in_flight == 0              # drained at the flush
+
+
+@hp.given(pp=st.integers(1, 6), m=st.integers(1, 12), vpp=st.integers(1, 4))
+@hp.settings(max_examples=40, deadline=None)
+def test_interleaved_covers_all_chunks(pp, m, vpp):
+    """Every device runs all vpp virtual chunks, each (micro, chunk)
+    exactly once per phase."""
+    for tasks in build_schedule("interleaved", pp, m, vpp):
+        for phase in ("F", "B"):
+            pairs = [(t.micro, t.chunk) for t in tasks if t.phase == phase]
+            assert sorted(pairs) == sorted(
+                (i, c) for i in range(m) for c in range(vpp))
+            assert {t.chunk for t in tasks if t.phase == phase} \
+                == set(range(vpp))
+
+
 @hp.given(m=st.sampled_from([2, 4, 8]), seed=st.integers(0, 5))
 @hp.settings(max_examples=12, deadline=None)
 def test_replay_jitter_bounded(m, seed):

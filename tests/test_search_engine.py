@@ -90,6 +90,31 @@ def test_pruning_soundness_no_pruned_candidate_beats_best():
             assert bt >= e.batch_time * (1 - 1e-9)   # entry holds a LB
 
 
+def test_pruning_sound_under_replay_oracle():
+    """Pruning soundness against the validation metrics: even in a
+    replayed "actual run", a pruned candidate can undercut its recorded
+    bound — and hence the returned best — by at most the paper's
+    batch-time error budget (repro.validate.Thresholds)."""
+    from repro.validate import Thresholds, compare_timelines
+
+    res = _engine(prune=True).search(16, 16, 128, **GRID)
+    assert res.stats.pruned_bound > 0
+    best = res.best()
+    thr = Thresholds()
+    provider = AnalyticalProvider(A40_CLUSTER)
+    for e in res.entries:
+        if not e.pruned:
+            continue
+        sim = DistSim(CFG, e.strategy, 16, 128, provider)
+        pred, (act,) = sim.predict_and_replay(seeds=(0,))
+        m = compare_timelines(pred.timeline, act.timeline)
+        # the oracle itself stays within the validation gate
+        assert m.batch_time_error <= thr.batch_time, e.strategy.label()
+        # oracle time ≥ (bound | best) minus the error budget
+        assert act.batch_time >= e.batch_time * (1 - thr.batch_time)
+        assert act.batch_time >= best.batch_time * (1 - thr.batch_time)
+
+
 def test_memory_pruning_marks_oom_infeasible():
     tiny_chip = dataclasses.replace(A40_CLUSTER.chip, hbm_bytes=1e4)
     tiny = dataclasses.replace(A40_CLUSTER, name="tiny", chip=tiny_chip)

@@ -1,0 +1,82 @@
+"""Timeline utilities: empty-device edge cases and the per-activity
+error metrics that back ``repro.validate``."""
+import pytest
+
+from repro.configs.base import get_config, smoke_config
+from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Strategy,
+                        Timeline)
+from repro.core.timeline import (Activity, activity_duration_error,
+                                 batch_time_error, error_summary,
+                                 utilization_delta)
+
+PROVIDER = AnalyticalProvider(A40_CLUSTER)
+
+
+def test_empty_timeline_reports_zero_utilization():
+    """Edge case: no activities at all — utilization must be 0.0 for
+    every device, no division error, no bubbles."""
+    tl = Timeline([], n_devices=4)
+    assert tl.batch_time == 0.0
+    assert tl.utilization() == {d: 0.0 for d in range(4)}
+    assert tl.bubble_fraction() == 0.0
+    assert tl.by_device() == {d: [] for d in range(4)}
+
+
+def test_zero_duration_activities_zero_utilization():
+    """All-zero-duration events (pp stages with no layers emit 0-width
+    OPT events) → batch_time 0, utilization 0.0 everywhere."""
+    acts = [Activity(device=d, name=f"OPT:d{d}", kind="OPT",
+                     start=0.0, end=0.0) for d in range(2)]
+    tl = Timeline(acts, n_devices=2)
+    assert tl.batch_time == 0.0
+    assert tl.utilization() == {0: 0.0, 1: 0.0}
+
+
+def test_device_with_no_activities_is_zero_not_missing():
+    tl = Timeline([Activity(device=0, name="F:s0:m0", kind="F",
+                            start=0.0, end=1.0)], n_devices=3)
+    util = tl.utilization()
+    assert util[0] == 1.0
+    assert util[1] == 0.0 and util[2] == 0.0
+
+
+def test_degenerate_pp_with_empty_stages_end_to_end():
+    """pp larger than the layer count: trailing stages own no layers,
+    yet prediction and replay still produce finite metrics."""
+    cfg = smoke_config(get_config("gpt2_345m"))    # 2 layers
+    sim = DistSim(cfg, Strategy(pp=4, microbatches=4), 4, 64, PROVIDER)
+    pred, (act,) = sim.predict_and_replay(seeds=(0,))
+    assert pred.batch_time > 0
+    assert all(0.0 <= u <= 1.0 for u in pred.utilization.values())
+    s = error_summary(pred.timeline, act.timeline)
+    assert all(v == v and v >= 0.0 for v in s.values())   # finite, no NaN
+
+
+def test_error_metrics_zero_on_identical():
+    sim = DistSim(get_config("bert_large"), Strategy(pp=2, dp=2,
+                                                     microbatches=4),
+                  16, 128, PROVIDER)
+    tl = sim.predict().timeline
+    assert batch_time_error(tl, tl) == 0.0
+    assert all(v == 0.0 for v in activity_duration_error(tl, tl).values())
+    assert all(v == 0.0 for v in utilization_delta(tl, tl).values())
+    assert all(v == 0.0 for v in error_summary(tl, tl).values())
+
+
+def test_error_summary_tracks_jitter():
+    sim = DistSim(get_config("bert_large"), Strategy(pp=2, dp=2,
+                                                     microbatches=4),
+                  16, 128, PROVIDER)
+    pred, (act,) = sim.predict_and_replay(seeds=(1,))
+    s = error_summary(pred.timeline, act.timeline)
+    assert s["batch_time_error"] == pytest.approx(
+        batch_time_error(pred.timeline, act.timeline))
+    assert 0.0 < s["activity_error_max"] < 0.05
+    assert s["activity_error_mean"] <= s["activity_error_max"]
+    assert s["stage_error_mean"] <= s["stage_error_max"]
+
+
+def test_error_summary_empty_vs_empty():
+    e = Timeline([], n_devices=2)
+    s = error_summary(e, e)
+    assert all(v == 0.0 for v in s.values())

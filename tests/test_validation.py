@@ -1,0 +1,199 @@
+"""Tier-1 paper-fidelity gate (paper §5): every non-xfail cell of the
+smoke matrix must show predict-vs-replay batch-time error ≤ 4% and
+per-device activity error ≤ 5%; the sweep report JSON round-trips; and
+the aggregated metrics match the committed goldens, so any drift in the
+event/timeline core fails here before it ships.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core import A40_CLUSTER, AnalyticalProvider
+from repro.validate import (CellMetrics, Thresholds, compare_timelines,
+                            run_cell, run_sweep, smoke_matrix)
+from repro.validate.report import (dump, dumps, format_validation_report,
+                                   load, load_path)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "validation_smoke.json")
+MATRIX = smoke_matrix()
+SEEDS = (0, 1, 2)
+THRESHOLDS = Thresholds()
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    return run_sweep(MATRIX, cluster=A40_CLUSTER, seeds=SEEDS,
+                     thresholds=THRESHOLDS)
+
+
+@pytest.fixture(scope="module")
+def by_label(sweep):
+    return {c.cell.label(): c for c in sweep.cells}
+
+
+@pytest.mark.parametrize("label", [c.label() for c in MATRIX])
+def test_cell_within_paper_targets(by_label, label):
+    """§5 acceptance: ≤4% batch-time error, ≤5% activity error."""
+    res = by_label[label]
+    if res.cell.xfail:
+        if res.passed:
+            pytest.xfail(f"xfail cell passed (un-mark it): {label}")
+        pytest.xfail(res.cell.xfail)
+    m = res.metrics
+    assert m.batch_time_error <= 0.04, (label, m.batch_time_error)
+    assert m.activity_error_max <= 0.05, (label, m.activity_error_max)
+    assert res.passed, (label, res.violations)
+
+
+def test_sweep_gates_as_a_whole(sweep):
+    assert sweep.passed, [c.cell.label() for c in sweep.failures]
+    assert not sweep.xpasses
+
+
+def test_report_roundtrip(sweep):
+    """Acceptance: validate.report.load(dump(r)) == r, also through an
+    actual JSON string (tuples/lists normalized)."""
+    assert load(dump(sweep)) == sweep
+    assert load(json.loads(dumps(sweep))) == sweep
+    assert load(dumps(sweep)) == sweep
+
+
+def test_report_save_load_path(sweep, tmp_path):
+    from repro.validate.report import save
+    p = str(tmp_path / "report.json")
+    save(sweep, p)
+    assert load_path(p) == sweep
+
+
+def test_goldens_match(sweep):
+    """Aggregated metrics are deterministic (fixed seeds, analytical
+    provider) — they must match the committed baseline to ~1e-6."""
+    golden = load_path(GOLDEN)
+    assert golden.passed
+    cur = {c.cell.label(): c for c in sweep.cells}
+    gold = {c.cell.label(): c for c in golden.cells}
+    assert set(cur) == set(gold)
+    for label, g in gold.items():
+        c = cur[label]
+        assert c.cell == g.cell
+        for f in dataclasses.fields(CellMetrics):
+            a = getattr(c.metrics, f.name)
+            b = getattr(g.metrics, f.name)
+            assert a == pytest.approx(b, rel=1e-6, abs=1e-9), \
+                (label, f.name)
+
+
+def test_sweep_deterministic():
+    """Same cell, fresh providers → bit-identical metrics (no hidden
+    cache-order or global-RNG dependence)."""
+    cell = MATRIX[0]
+    a = run_cell(cell, AnalyticalProvider(A40_CLUSTER), seeds=SEEDS)
+    b = run_cell(cell, AnalyticalProvider(A40_CLUSTER), seeds=SEEDS)
+    assert a.metrics == b.metrics
+    assert a.replay_batch_times == b.replay_batch_times
+
+
+def test_thresholds_actually_trip():
+    """The gate can fail: impossible thresholds flag every cell."""
+    strict = Thresholds(batch_time=0.0, activity=0.0, stage=0.0,
+                        utilization=0.0)
+    res = run_sweep(MATRIX[:2], cluster=A40_CLUSTER, seeds=(0,),
+                    thresholds=strict)
+    assert not res.passed
+    assert all(c.violations for c in res.cells)
+    rep = dump(res)
+    assert rep["n_failures"] == len(res.cells)
+    assert "FAIL" in format_validation_report(rep)
+
+
+def test_xfail_cells_report_but_do_not_gate():
+    bad = dataclasses.replace(MATRIX[0], xfail="synthetic known-bad")
+    res = run_sweep([bad], cluster=A40_CLUSTER, seeds=(0,),
+                    thresholds=Thresholds(batch_time=0.0, activity=0.0,
+                                          stage=0.0, utilization=0.0))
+    assert not res.cells[0].passed
+    assert res.passed                   # xfail cell doesn't gate
+    assert not res.failures
+    assert "xfail" in format_validation_report(res)
+
+
+def test_inf_metrics_stay_strict_json(sweep):
+    """A degenerate-replay report (infinite error) must still be
+    RFC-8259 JSON — no bare 'Infinity' tokens — and round-trip."""
+    bad = load(dump(sweep))
+    c = bad.cells[0]
+    c.metrics = dataclasses.replace(c.metrics,
+                                    batch_time_error=float("inf"))
+    c.per_seed = ([dataclasses.replace(c.per_seed[0],
+                                       batch_time_error=float("inf"))]
+                  + c.per_seed[1:])
+    s = dumps(bad)
+    assert "Infinity" not in s
+    json.loads(s)                       # strict parse succeeds
+    assert load(s) == bad
+    assert load(s).cells[0].metrics.batch_time_error == float("inf")
+    text = format_validation_report(bad)    # must render, not raise
+    assert "inf" in text
+
+
+def test_schema_version_checked(sweep):
+    d = dump(sweep)
+    d["schema"] = 999
+    with pytest.raises(ValueError, match="schema"):
+        load(d)
+    with pytest.raises(ValueError, match="schema"):
+        load({"cells": []})                 # missing version entirely
+
+
+def test_degenerate_oracle_trips_gate():
+    """An empty replay timeline vs a real prediction is infinite error,
+    not perfect agreement — the harness must flag it."""
+    from repro.core import AnalyticalProvider, DistSim, Timeline
+    from repro.core.timeline import batch_time_error
+    cell = MATRIX[0]
+    sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
+                  cell.seq, AnalyticalProvider(A40_CLUSTER))
+    pred = sim.predict().timeline
+    empty = Timeline([], n_devices=pred.n_devices)
+    assert batch_time_error(pred, empty) == float("inf")
+    m = compare_timelines(pred, empty)
+    assert THRESHOLDS.violations(m)
+
+
+def test_worst_seed_threshold_gates():
+    """A single bad replay seed trips the gate even when the seed-mean
+    is within budget."""
+    thr = Thresholds(batch_time=1.0, batch_time_worst=0.0, activity=1.0,
+                     stage=1.0, utilization=1.0)
+    res = run_sweep(MATRIX[:1], cluster=A40_CLUSTER, seeds=SEEDS,
+                    thresholds=thr)
+    assert res.cells[0].violations == ["batch_time_worst"]
+    assert not res.passed
+
+
+def test_worst_seed_tracked(sweep):
+    for c in sweep.cells:
+        assert c.metrics.worst_batch_time_error == pytest.approx(
+            max(m.batch_time_error for m in c.per_seed))
+        assert c.metrics.worst_batch_time_error \
+            >= c.metrics.batch_time_error - 1e-12
+
+
+def test_metrics_zero_for_identical_timelines():
+    from repro.core import DistSim
+    cell = MATRIX[0]
+    sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
+                  cell.seq, AnalyticalProvider(A40_CLUSTER))
+    tl = sim.predict().timeline
+    m = compare_timelines(tl, tl)
+    assert m == CellMetrics()
+
+
+def test_format_report_lists_every_cell(sweep):
+    text = format_validation_report(sweep)
+    for c in sweep.cells:
+        assert c.cell.label() in text
+    assert "PASSED" in text
