@@ -1,0 +1,170 @@
+"""Timeline-engine scaling benchmark (CI: timeline-smoke job).
+
+Measures the event-flow engine (``repro.core.engine``) against the
+historical polling scheduler (``repro.core._polling_reference``) and
+records scaling: the predict path at >= 4096 devices and the replay
+oracle at >= 1024 devices. Exits non-zero if the engine is less than
+10x faster than the polling scheduler on the 1024-device predict path
+(the PR acceptance gate).
+
+    PYTHONPATH=src python benchmarks/bench_timeline.py --smoke
+    PYTHONPATH=src python benchmarks/bench_timeline.py --full
+    PYTHONPATH=src python benchmarks/bench_timeline.py --out bench.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.configs.base import get_config
+from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim, Strategy
+from repro.core._polling_reference import construct_timeline_polling
+
+MODEL = "gpt2_345m"
+SEQ = 128
+GATE_DEVICES = 1024
+GATE_SPEEDUP = 10.0
+
+#: devices -> (mp, pp, dp, m); devices = mp * pp * dp
+SIZES = {
+    256: (4, 8, 8, 16),
+    1024: (4, 8, 32, 16),
+    4096: (4, 8, 128, 16),
+    8192: (8, 16, 64, 16),
+    16384: (8, 16, 128, 32),
+}
+
+
+def _best_of(fn, n=3):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _polling_predict_stats(cfg, strat, gb, provider, pos):
+    tl = construct_timeline_polling(cfg, strat, gb, SEQ, provider,
+                                    positions=pos)
+    util = tl.utilization()            # same stats DistSim.predict computes
+    tl.bubble_fraction(util)
+    return tl
+
+
+def bench_cell(cfg, provider, devices: int, with_polling: bool,
+               with_replay_polling: bool) -> dict:
+    mp, pp, dp, m = SIZES[devices]
+    strat = Strategy(mp=mp, pp=pp, dp=dp, microbatches=m)
+    gb = dp * m
+    sim = DistSim(cfg, strat, gb, SEQ, provider)
+    pos = sim.positions()
+
+    t0 = time.perf_counter()
+    engine = sim.engine(pos)           # built once, cached for the runs
+    build_s = time.perf_counter() - t0
+
+    cell = {
+        "devices": devices,
+        "strategy": f"{strat.label()}:m{m}",
+        "tasks": engine.total_tasks * dp,
+        "engine_build_s": build_s,
+        "engine_predict_s": _best_of(
+            lambda: sim.predict(positions=pos)),
+        "engine_replay_s": _best_of(
+            lambda: sim.replay(seed=0, positions=pos)),
+    }
+    tl = sim.predict(positions=pos).timeline
+    t0 = time.perf_counter()
+    acts = tl.activities               # lazy -> materialize now
+    cell["materialize_s"] = time.perf_counter() - t0
+    cell["n_activities"] = len(acts)
+
+    if with_polling:
+        cell["polling_predict_s"] = _best_of(
+            lambda: _polling_predict_stats(cfg, strat, gb, provider, pos),
+            n=1)
+        cell["speedup_predict"] = (cell["polling_predict_s"]
+                                   / cell["engine_predict_s"])
+    if with_replay_polling:
+        cell["polling_replay_s"] = _best_of(
+            lambda: construct_timeline_polling(
+                cfg, strat, gb, SEQ, provider, jitter_sigma=0.025,
+                seed=0, positions=pos),
+            n=1)
+        cell["speedup_replay"] = (cell["polling_replay_s"]
+                                  / cell["engine_replay_s"])
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="CI sizes (<= 4096 devices; the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="scale to 16384 devices, polling to 4096")
+    ap.add_argument("--out", default="timeline_bench.json",
+                    help="report path ('' to skip writing)")
+    args = ap.parse_args()
+
+    sizes = ([256, 1024, 4096, 8192, 16384] if args.full
+             else [256, 1024, 4096])
+    polling_cap = 4096 if args.full else GATE_DEVICES
+
+    cfg = get_config(MODEL)
+    provider = AnalyticalProvider(A40_CLUSTER)
+    t0 = time.perf_counter()
+    cells = [bench_cell(cfg, provider, n,
+                        with_polling=n <= polling_cap,
+                        with_replay_polling=n <= polling_cap)
+             for n in sizes]
+    wall = time.perf_counter() - t0
+
+    hdr = (f"{'devices':>8} {'tasks':>8} {'predict':>10} {'replay':>10} "
+           f"{'material.':>10} {'poll-pred':>10} {'pred-x':>8} "
+           f"{'repl-x':>8}")
+    print(f"timeline engine scaling — {MODEL}, {A40_CLUSTER.name}, "
+          f"seq={SEQ}\n\n{hdr}")
+    for c in cells:
+        print(f"{c['devices']:>8} {c['tasks']:>8} "
+              f"{c['engine_predict_s'] * 1e3:>8.1f}ms "
+              f"{c['engine_replay_s'] * 1e3:>8.1f}ms "
+              f"{c['materialize_s'] * 1e3:>8.1f}ms "
+              + (f"{c['polling_predict_s'] * 1e3:>8.1f}ms "
+                 f"{c['speedup_predict']:>7.0f}x "
+                 f"{c['speedup_replay']:>7.0f}x"
+                 if "polling_predict_s" in c else f"{'—':>10} "
+                 f"{'—':>8} {'—':>8}"))
+    print(f"\nswept {len(cells)} sizes in {wall:.1f}s")
+
+    gate = next(c for c in cells if c["devices"] == GATE_DEVICES)
+    report = {
+        "schema": 1,
+        "model": MODEL,
+        "cluster": A40_CLUSTER.name,
+        "mode": "full" if args.full else "smoke",
+        "gate": {"devices": GATE_DEVICES, "required_speedup": GATE_SPEEDUP,
+                 "speedup_predict": gate["speedup_predict"],
+                 "speedup_replay": gate["speedup_replay"]},
+        "cells": cells,
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"report written to {args.out}")
+
+    if gate["speedup_predict"] < GATE_SPEEDUP:
+        print(f"bench_timeline/ERROR: predict speedup "
+              f"{gate['speedup_predict']:.1f}x < {GATE_SPEEDUP}x at "
+              f"{GATE_DEVICES} devices", file=sys.stderr)
+        sys.exit(1)
+    print(f"gate OK: {gate['speedup_predict']:.0f}x predict / "
+          f"{gate['speedup_replay']:.0f}x replay speedup at "
+          f"{GATE_DEVICES} devices (gate: {GATE_SPEEDUP:.0f}x predict)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ Public API:
     from repro.core import DistSim, Strategy, grid_search
 """
 from repro.core.events import Strategy, Event, ComposedEvent
+from repro.core.engine import EventFlowEngine
 from repro.core.simulator import DistSim, SimResult
 from repro.core.search import grid_search, SearchEntry
 from repro.core.costmodel import (ClusterSpec, CLUSTERS, V5E_POD,
@@ -20,6 +21,7 @@ from repro.core.timeline import (Timeline, Activity, batch_time_error,
 
 __all__ = [
     "DistSim", "SimResult", "Strategy", "Event", "ComposedEvent",
+    "EventFlowEngine",
     "grid_search", "SearchEntry", "ClusterSpec", "CLUSTERS", "V5E_POD",
     "A40_CLUSTER", "get_cluster", "AnalyticalProvider", "MeasuredProvider",
     "Provider", "ProviderStats", "profiling_cost",

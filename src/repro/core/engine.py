@@ -1,0 +1,435 @@
+"""Event-flow timeline engine (paper §4.3, Algorithm 1).
+
+Replaces the seed's O((dp·pp)²·tasks) polling scheduler with a
+dependency-driven ready-queue: a device becomes *enabled* the moment the
+head task of its schedule has all inputs known, and enabled devices are
+popped from a heap keyed on ``max(device_free, input_arrival)`` — the
+paper's ``first_available`` placement rule, executed exactly once per
+task instead of rediscovered by rescanning every device queue.
+
+Structure exploited (the paper's "leverage the hierarchy" claim, plus
+Alpa-style replica reuse):
+
+* **MP**    — all mp ranks of a pipeline device run the same activities;
+  they are materialized by replication, never simulated.
+* **DP**    — replicas only interact at the gradient sync. With zero
+  noise (``jitter == straggler == clock == 0``, the predict path) every
+  replica's pipeline timeline is identical, so ONE canonical replica is
+  simulated and the rest are replicated analytically: scheduling work is
+  O(pp·m·vpp), independent of dp.
+* **Noise** — the replay oracle draws all per-instance jitter factors
+  vectorized per (replica × microbatch × event) batch up front; the
+  inner scheduling loop never touches the RNG.
+
+Replay-oracle modeling fixes vs the seed polling scheduler:
+
+* **Clock skew** is one constant offset per (replica, device, mp rank)
+  per run — the seed drew an independent offset per *activity*, which
+  is profiling noise, not clock skew.
+* **The DP gradient all-reduce is synchronizing**: it completes when the
+  slowest participant does. Durations are drawn per replica and the
+  *maximum* becomes the common end time — the seed let each replica
+  exit the blocking collective at its own independently-jittered time.
+
+RNG draw order (fixed; documented so seeds stay meaningful):
+straggler speeds → per-position fwd/bwd event factors → p2p factors →
+DP-sync factors → optimizer factors → clock offsets.
+"""
+from __future__ import annotations
+
+import heapq
+from math import isnan
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.events import Event, Stage, Strategy
+from repro.core.profiler import Provider
+from repro.core.schedules import build_schedule
+from repro.core.timeline import Activity, LazyTimeline, Timeline
+
+_MIN_JITTER_FACTOR = 0.05       # clamp: an event never runs 20x faster
+
+
+def _jittered(base: np.ndarray, rng, sigma: float) -> np.ndarray:
+    """base * clamp(1 + sigma*N(0,1)), elementwise, vectorized."""
+    f = np.maximum(_MIN_JITTER_FACTOR,
+                   1.0 + sigma * rng.standard_normal(base.shape))
+    return base * f
+
+
+class EventFlowEngine:
+    """One (stages × strategy × provider) simulation context.
+
+    Build once, then ``run()`` any number of predict / replay variants —
+    event means, schedules, task metadata and activity names are all
+    precomputed here and shared across runs.
+    """
+
+    def __init__(self, stages: Sequence[Stage], strat: Strategy,
+                 provider: Provider):
+        self.stages = list(stages)
+        self.strat = strat
+        self.provider = provider
+        cluster = provider.cluster
+        pp, m, vpp = strat.pp, strat.microbatches, strat.vpp
+        self.n_pos = len(self.stages)
+        self.m = m
+
+        # ---- per-position event means (profiled once, reused) ----
+        # Python-float sequential sums keep the predict path bit-identical
+        # with the historical scheduler (which summed draw-by-draw).
+        self.fwd_event_means: List[np.ndarray] = []
+        self.bwd_event_means: List[np.ndarray] = []
+        self.fwd_base: List[float] = []
+        self.bwd_base: List[float] = []
+        for st in self.stages:
+            fm = [provider.time(e) for e in st.fwd.events]
+            bm = [provider.time(e) for e in st.bwd.events]
+            self.fwd_event_means.append(np.asarray(fm))
+            self.bwd_event_means.append(np.asarray(bm))
+            self.fwd_base.append(sum(fm))
+            self.bwd_base.append(sum(bm))
+
+        # p2p mean per boundary (identical fwd/bwd: same structural event)
+        span = strat.mp + 1
+        scope = "intra" if span <= cluster.devices_per_island else "inter"
+        self.p2p_base = [
+            provider.time(Event(kind="p2p", name=f"p2p:pos{p}",
+                                nbytes=self.stages[p].boundary_act_bytes,
+                                scope=scope))
+            for p in range(self.n_pos)]
+
+        # ---- DP-level event means per pipeline device ----
+        chip = cluster.chip
+        dp = strat.dp
+        self.sync = dp > 1 and strat.schedule != "pipedream"
+        self.ar_base: List[float] = []
+        self.opt_base: List[float] = []
+        for d in range(pp):
+            pos_list = [c * pp + d for c in range(vpp)
+                        if c * pp + d < self.n_pos]
+            pbytes = (sum(self.stages[p].param_bytes for p in pos_list)
+                      / max(1, strat.mp))
+            pbytes *= strat.grad_compress      # int8 compression what-if
+            ar = 0.0
+            if self.sync:
+                gspan = dp * pp * strat.mp
+                gscope = ("intra" if gspan <= cluster.devices_per_island
+                          else "inter")
+                if strat.zero1:
+                    ar = (provider.time(Event(
+                        kind="collective", name=f"dp_rs:d{d}",
+                        coll_op="reduce_scatter", nbytes=pbytes,
+                        n_dev=dp, scope=gscope))
+                        + provider.time(Event(
+                            kind="collective", name=f"dp_ag:d{d}",
+                            coll_op="all_gather", nbytes=pbytes,
+                            n_dev=dp, scope=gscope)))
+                else:
+                    ar = provider.time(Event(
+                        kind="collective", name=f"dp_ar:d{d}",
+                        coll_op="all_reduce", nbytes=pbytes,
+                        n_dev=dp, scope=gscope))
+            self.ar_base.append(ar)
+            # AdamW: streams fp32 master params + m + v (~6 passes of 2x)
+            opt_bytes = pbytes * (1.0 / dp if strat.zero1 else 1.0)
+            self.opt_base.append(6.0 * opt_bytes * 2 / chip.hbm_bw)
+
+        # ---- schedule task lists as flat per-device metadata ----
+        sched = build_schedule(strat.schedule, pp, m, vpp)
+        self.task_isf: List[List[bool]] = []
+        self.task_pos: List[List[int]] = []
+        self.task_micro: List[List[int]] = []
+        self.task_name: List[List[str]] = []
+        self.task_p2p_name: List[List[Optional[str]]] = []
+        for d in range(pp):
+            isf = [t.phase == "F" for t in sched[d]]
+            pos = [t.chunk * pp + d for t in sched[d]]
+            mic = [t.micro for t in sched[d]]
+            self.task_isf.append(isf)
+            self.task_pos.append(pos)
+            self.task_micro.append(mic)
+            self.task_name.append(
+                [f"{'F' if f else 'B'}:s{p}:m{i}"
+                 for f, p, i in zip(isf, pos, mic)])
+            # boundary sends carry the SENDING task's position in both
+            # name and stage (matches the historical activity labels)
+            p2p = []
+            for f, p, i in zip(isf, pos, mic):
+                if f and p < self.n_pos - 1:
+                    p2p.append(f"P2P:f:s{p}:m{i}")
+                elif not f and p > 0:
+                    p2p.append(f"P2P:b:s{p}:m{i}")
+                else:
+                    p2p.append(None)
+            self.task_p2p_name.append(p2p)
+        self.total_tasks = sum(len(t) for t in self.task_isf)
+
+    # ------------------------------------------------------------------
+    # noise sampling (vectorized; fixed draw order)
+    # ------------------------------------------------------------------
+
+    def _sample(self, dp: int, rng, jitter: float, straggler: float,
+                clock: float):
+        """All per-run random state, drawn up front.
+
+        Returns (speed(dp,pp), dur_f, dur_b, p2p_f, p2p_b, ar, opt, off)
+        where dur_* are (dp, n_pos, m), ar/opt are (dp, pp) and off is
+        (dp, pp, mp).
+        """
+        pp, m, mp = self.strat.pp, self.m, self.strat.mp
+        n_pos = self.n_pos
+
+        speed = np.ones((dp, pp))
+        if rng is not None and straggler > 0:
+            speed = 1.0 + straggler * np.abs(rng.standard_normal((dp, pp)))
+
+        dur_f = np.empty((dp, n_pos, m))
+        dur_b = np.empty((dp, n_pos, m))
+        p2p_f = np.zeros((dp, n_pos, m))
+        p2p_b = np.zeros((dp, n_pos, m))
+        draw_jitter = rng is not None and jitter > 0
+        for p in range(n_pos):
+            dev = p % pp
+            if draw_jitter:
+                fm, bm = self.fwd_event_means[p], self.bwd_event_means[p]
+                fdur = (_jittered(np.broadcast_to(fm, (dp, m, len(fm))),
+                                  rng, jitter).sum(-1)
+                        if len(fm) else np.zeros((dp, m)))
+                bdur = (_jittered(np.broadcast_to(bm, (dp, m, len(bm))),
+                                  rng, jitter).sum(-1)
+                        if len(bm) else np.zeros((dp, m)))
+            else:
+                fdur = np.full((dp, m), self.fwd_base[p])
+                bdur = np.full((dp, m), self.bwd_base[p])
+            dur_f[:, p] = fdur * speed[:, dev, None]
+            dur_b[:, p] = bdur * speed[:, dev, None]
+        for p in range(n_pos - 1):
+            # forward send pos -> pos+1 and backward send pos+1 -> pos both
+            # move stage-p boundary bytes; each is drawn (and straggled) on
+            # its SENDING device.
+            base = np.full((dp, m), self.p2p_base[p])
+            ptf = _jittered(base, rng, jitter) if draw_jitter else base
+            ptb = _jittered(base, rng, jitter) if draw_jitter else base
+            p2p_f[:, p] = ptf * speed[:, p % pp, None]
+            p2p_b[:, p] = ptb * speed[:, (p + 1) % pp, None]
+
+        ar = np.asarray(self.ar_base)[None, :] * np.ones((dp, 1))
+        opt = np.asarray(self.opt_base)[None, :] * np.ones((dp, 1))
+        if draw_jitter:
+            ar = _jittered(ar, rng, jitter)
+            opt = _jittered(opt, rng, jitter)
+        ar *= speed
+        opt *= speed
+
+        off = np.zeros((dp, pp, mp))
+        if rng is not None and clock > 0:
+            off = clock * rng.standard_normal((dp, pp, mp))
+        return speed, dur_f, dur_b, p2p_f, p2p_b, ar, opt, off
+
+    # ------------------------------------------------------------------
+    # single-replica pipeline simulation (ready-queue over arrays)
+    # ------------------------------------------------------------------
+
+    def _simulate_replica(self, dur_f, dur_b, p2p_f, p2p_b):
+        """List-schedule one DP replica's pipeline.
+
+        dur/p2p: (n_pos, m) duration lookups for THIS replica.
+        Returns (starts, ends, p2p_ends, free) — per-device lists aligned
+        with the task lists; p2p_ends entries are None for tasks with no
+        boundary send.
+        """
+        pp, n_pos = self.strat.pp, self.n_pos
+        nan = float("nan")
+        f_end = [[nan] * self.m for _ in range(n_pos)]
+        arr_f = [[nan] * self.m for _ in range(n_pos)]
+        arr_b = [[nan] * self.m for _ in range(n_pos)]
+        dur_f = dur_f.tolist()
+        dur_b = dur_b.tolist()
+        p2p_f = p2p_f.tolist()
+        p2p_b = p2p_b.tolist()
+
+        free = [0.0] * pp
+        ptr = [0] * pp
+        n_tasks = [len(t) for t in self.task_isf]
+        starts = [[] for _ in range(pp)]
+        ends = [[] for _ in range(pp)]
+        p2p_ends: List[List[Optional[float]]] = [[] for _ in range(pp)]
+
+        heap: List[Tuple[float, int]] = []
+        enabled = [False] * pp
+
+        def try_enable(d: int) -> None:
+            if enabled[d] or ptr[d] >= n_tasks[d]:
+                return
+            i = ptr[d]
+            pos, mic = self.task_pos[d][i], self.task_micro[d][i]
+            if self.task_isf[d][i]:
+                ready = 0.0 if pos == 0 else arr_f[pos][mic]
+            else:
+                ready = f_end[pos][mic]
+                if pos < n_pos - 1 and not isnan(ready):
+                    ab = arr_b[pos][mic]
+                    ready = ab if isnan(ab) else max(ready, ab)
+            if not isnan(ready):
+                enabled[d] = True
+                heapq.heappush(heap, (max(free[d], ready), d))
+
+        for d in range(pp):
+            try_enable(d)
+
+        done = 0
+        while heap:
+            start, d = heapq.heappop(heap)
+            enabled[d] = False
+            i = ptr[d]
+            pos, mic = self.task_pos[d][i], self.task_micro[d][i]
+            if self.task_isf[d][i]:
+                end = start + dur_f[pos][mic]
+                f_end[pos][mic] = end
+                if pos < n_pos - 1:
+                    t_arr = end + p2p_f[pos][mic]
+                    arr_f[pos + 1][mic] = t_arr
+                    p2p_ends[d].append(t_arr)
+                    try_enable((pos + 1) % pp)
+                else:
+                    p2p_ends[d].append(None)
+            else:
+                end = start + dur_b[pos][mic]
+                if pos > 0:
+                    t_arr = end + p2p_b[pos - 1][mic]
+                    arr_b[pos - 1][mic] = t_arr
+                    p2p_ends[d].append(t_arr)
+                    try_enable((pos - 1) % pp)
+                else:
+                    p2p_ends[d].append(None)
+            starts[d].append(start)
+            ends[d].append(end)
+            free[d] = end
+            ptr[d] += 1
+            done += 1
+            try_enable(d)
+
+        if done != self.total_tasks:
+            raise RuntimeError(
+                f"pipeline schedule deadlock: {self.strat.label()} "
+                f"{self.strat.schedule} done={done}/{self.total_tasks}")
+        return starts, ends, p2p_ends, free
+
+    # ------------------------------------------------------------------
+    # full run
+    # ------------------------------------------------------------------
+
+    def run(self, jitter_sigma: float = 0.0, straggler_sigma: float = 0.0,
+            clock_sigma: float = 0.0, seed: Optional[int] = None
+            ) -> Timeline:
+        strat = self.strat
+        pp, dp, mp = strat.pp, strat.dp, strat.mp
+        noisy = (jitter_sigma > 0 or straggler_sigma > 0 or clock_sigma > 0)
+        rng = (np.random.RandomState(seed)
+               if seed is not None and noisy else None)
+        _, dur_f, dur_b, p2p_f, p2p_b, ar, opt, off = self._sample(
+            dp, rng, jitter_sigma, straggler_sigma, clock_sigma)
+
+        # DP replicas are independent until the gradient sync; with zero
+        # noise they are identical — simulate one, replicate analytically.
+        n_sim = dp if rng is not None else 1
+        reps = [self._simulate_replica(dur_f[r], dur_b[r],
+                                       p2p_f[r], p2p_b[r])
+                for r in range(n_sim)]
+
+        # ---- DP level: gradient sync + optimizer ----
+        # A blocking all-reduce starts when the last participant arrives
+        # and ends when the slowest draw completes — common to ALL
+        # replicas (the synchronizing-collective fix).
+        ar_start = [0.0] * pp
+        ar_end = [0.0] * pp
+        if self.sync:
+            for d in range(pp):
+                ar_start[d] = max(reps[r % n_sim][3][d] for r in range(dp))
+                ar_end[d] = ar_start[d] + max(ar[r, d] for r in range(dp))
+        opt_span = [[None] * pp for _ in range(dp)]
+        for r in range(dp):
+            freer = reps[r % n_sim][3]
+            for d in range(pp):
+                t0 = ar_end[d] if self.sync else freer[d]
+                opt_span[r][d] = (t0, t0 + float(opt[r, d]))
+
+        # ---- aggregate stats from the arrays (no Activity objects) ----
+        # pipeline-level busy / latest-end per simulated replica & device
+        pipe_busy = [[0.0] * pp for _ in range(n_sim)]
+        pipe_last = [[0.0] * pp for _ in range(n_sim)]
+        for s in range(n_sim):
+            starts, ends, p2p_ends, _ = reps[s]
+            for d in range(pp):
+                b = 0.0
+                last = 0.0
+                for st, en in zip(starts[d], ends[d]):
+                    b += en - st
+                    if en > last:
+                        last = en
+                for pe in p2p_ends[d]:
+                    if pe is not None and pe > last:
+                        last = pe
+                pipe_busy[s][d] = b
+                pipe_last[s][d] = last
+
+        busy: List[float] = [0.0] * (dp * pp * mp)
+        batch_time = 0.0
+        for r in range(dp):
+            s = r % n_sim
+            for d in range(pp):
+                b = pipe_busy[s][d]
+                if self.sync:
+                    b += ar_end[d] - ar_start[d]
+                t0, t1 = opt_span[r][d]
+                b += t1 - t0
+                last = max(pipe_last[s][d], t1)
+                base = (r * pp + d) * mp
+                for j in range(mp):
+                    busy[base + j] = b
+                    end_j = last + off[r, d, j]
+                    if end_j > batch_time:
+                        batch_time = end_j
+
+        def materialize() -> List[Activity]:
+            acts: List[Activity] = []
+            add = acts.append
+            for r in range(dp):
+                starts, ends, p2p_ends, _ = reps[r % n_sim]
+                for d in range(pp):
+                    names = self.task_name[d]
+                    p2p_names = self.task_p2p_name[d]
+                    isf = self.task_isf[d]
+                    pos_l = self.task_pos[d]
+                    mic_l = self.task_micro[d]
+                    st_l, en_l, pe_l = starts[d], ends[d], p2p_ends[d]
+                    base = (r * pp + d) * mp
+                    for j in range(mp):
+                        o = off[r, d, j]
+                        dev = base + j
+                        for i in range(len(names)):
+                            s, e = st_l[i], en_l[i]
+                            add(Activity(device=dev, name=names[i],
+                                         kind="F" if isf[i] else "B",
+                                         start=s + o, end=e + o,
+                                         stage=pos_l[i], micro=mic_l[i]))
+                            pe = pe_l[i]
+                            if pe is not None:
+                                add(Activity(device=dev, name=p2p_names[i],
+                                             kind="P2P", start=e + o,
+                                             end=pe + o, stage=pos_l[i],
+                                             micro=mic_l[i]))
+                        if self.sync:
+                            add(Activity(device=dev, name=f"AR:d{d}",
+                                         kind="AR", start=ar_start[d] + o,
+                                         end=ar_end[d] + o, stage=d))
+                        t0, t1 = opt_span[r][d]
+                        add(Activity(device=dev, name=f"OPT:d{d}",
+                                     kind="OPT", start=t0 + o, end=t1 + o,
+                                     stage=d))
+            return acts
+
+        return LazyTimeline(n_devices=dp * pp * mp, builder=materialize,
+                            batch_time=batch_time, busy=busy)

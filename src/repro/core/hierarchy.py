@@ -6,8 +6,8 @@ Builds the full-cluster timeline bottom-up:
                   TP all-reduce (+ EP all-to-all)); times attached from the
                   (deduplicated) event profile.
   2. PP level   — layers → stages (or vpp virtual chunks); the pipeline
-                  schedule's task lists are placed by a deterministic
-                  dependency-driven list scheduler: a task starts at
+                  schedule's task lists are placed by the event-flow
+                  engine's dependency-driven ready-queue: a task starts at
                   max(device free, input arrival) — exactly the paper's
                   ``first_available`` rule.
   3. DP level   — the (stage x microbatch) timeline is replicated DP
@@ -19,22 +19,24 @@ The same constructor serves the replay oracle (``jitter_sigma > 0``):
 per-instance event times are drawn around the profiled means and
 per-device straggler/clock effects are added, which reproduces the
 paper's observed error sources without owning the 16-GPU cluster.
+
+The heavy lifting lives in :mod:`repro.core.engine`; ``construct_timeline``
+is a thin compatibility wrapper that builds an :class:`EventFlowEngine`
+per call. Hold an engine directly (``DistSim`` does) to amortize the
+per-strategy precomputation across predict + multi-seed replay runs.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import List, Optional
 
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import ClusterSpec
-from repro.core.events import (ComposedEvent, Event, Stage, Strategy,
+from repro.core.engine import EventFlowEngine
+from repro.core.events import (ComposedEvent, Stage, Strategy,
                                flatten_layers, layer_composed_events,
                                partition_stages)
 from repro.core.profiler import Provider
-from repro.core.schedules import build_schedule
-from repro.core.timeline import Activity, Timeline
+from repro.core.timeline import Timeline
 
 
 def build_positions(cfg: ArchConfig, strat: Strategy, microbatch: int,
@@ -54,19 +56,6 @@ def build_positions(cfg: ArchConfig, strat: Strategy, microbatch: int,
     return stages
 
 
-@dataclasses.dataclass
-class _Jitter:
-    rng: Optional[np.random.RandomState]
-    sigma: float
-    speed: np.ndarray            # (dp, pp) per-device multiplicative factor
-
-    def draw(self, mean: float, r: int, d: int) -> float:
-        if self.rng is None or mean == 0.0:
-            return mean * self.speed[r, d]
-        f = max(0.05, 1.0 + self.sigma * self.rng.randn())
-        return mean * f * self.speed[r, d]
-
-
 def construct_timeline(cfg: ArchConfig, strat: Strategy, global_batch: int,
                        seq: int, provider: Provider,
                        jitter_sigma: float = 0.0,
@@ -74,162 +63,12 @@ def construct_timeline(cfg: ArchConfig, strat: Strategy, global_batch: int,
                        clock_sigma: float = 0.0,
                        seed: Optional[int] = None,
                        positions: Optional[List[Stage]] = None) -> Timeline:
-    cluster = provider.cluster
-    m = strat.microbatches
-    microbatch = max(1, global_batch // (strat.dp * m))
-    stages = (positions if positions is not None
-              else build_positions(cfg, strat, microbatch, seq, cluster))
-    sched = build_schedule(strat.schedule, strat.pp, m, strat.vpp)
-    pp, dp, vpp = strat.pp, strat.dp, strat.vpp
-    n_pos = len(stages)
-
-    rng = np.random.RandomState(seed) if seed is not None else None
-    speed = np.ones((dp, pp))
-    if rng is not None and straggler_sigma > 0:
-        speed = 1.0 + straggler_sigma * np.abs(rng.randn(dp, pp))
-    jit = _Jitter(rng, jitter_sigma, speed)
-
-    def composed_dur(ce: ComposedEvent, r: int, d: int) -> float:
-        return sum(jit.draw(provider.time(e), r, d) for e in ce.events)
-
-    def p2p_event(pos: int, phase: str) -> Event:
-        span = strat.mp + 1
-        scope = ("intra" if span <= cluster.devices_per_island else "inter")
-        return Event(kind="p2p", name=f"p2p:{phase}:pos{pos}",
-                     nbytes=stages[pos].boundary_act_bytes, scope=scope)
-
-    acts: List[Activity] = []       # per (r, d) canonical activities
-    free: Dict[Tuple[int, int], float] = {(r, d): 0.0
-                                          for r in range(dp)
-                                          for d in range(pp)}
-    ptr = {(r, d): 0 for r in range(dp) for d in range(pp)}
-    f_end: Dict[Tuple[int, int, int], float] = {}   # (r, pos, micro)
-    arr_f: Dict[Tuple[int, int, int], float] = {}   # forward act arrival
-    arr_b: Dict[Tuple[int, int, int], float] = {}   # backward grad arrival
-
-    def dev_of(pos: int) -> int:
-        return pos % pp
-
-    total = dp * sum(len(s) for s in sched)
-    done = 0
-    while done < total:
-        progress = False
-        for r in range(dp):
-            for d in range(pp):
-                while ptr[(r, d)] < len(sched[d]):
-                    t = sched[d][ptr[(r, d)]]
-                    pos = t.chunk * pp + d
-                    if t.phase == "F":
-                        if pos == 0:
-                            ready = 0.0
-                        else:
-                            key = (r, pos, t.micro)
-                            if key not in arr_f:
-                                break
-                            ready = arr_f[key]
-                        dur = composed_dur(stages[pos].fwd, r, d)
-                    else:
-                        fkey = (r, pos, t.micro)
-                        if fkey not in f_end:
-                            break
-                        ready = f_end[fkey]
-                        if pos < n_pos - 1:
-                            bkey = (r, pos, t.micro)
-                            if bkey not in arr_b:
-                                break
-                            ready = max(ready, arr_b[bkey])
-                        dur = composed_dur(stages[pos].bwd, r, d)
-
-                    start = max(free[(r, d)], ready)
-                    end = start + dur
-                    free[(r, d)] = end
-                    acts.append(Activity(
-                        device=r * pp + d,
-                        name=f"{t.phase}:s{pos}:m{t.micro}",
-                        kind=t.phase, start=start, end=end,
-                        stage=pos, micro=t.micro))
-
-                    if t.phase == "F":
-                        f_end[(r, pos, t.micro)] = end
-                        if pos < n_pos - 1:
-                            pt = jit.draw(provider.time(p2p_event(pos, "f")),
-                                          r, d)
-                            arr_f[(r, pos + 1, t.micro)] = end + pt
-                            acts.append(Activity(
-                                device=r * pp + d,
-                                name=f"P2P:f:s{pos}:m{t.micro}",
-                                kind="P2P", start=end, end=end + pt,
-                                stage=pos, micro=t.micro))
-                    else:
-                        if pos > 0:
-                            pt = jit.draw(
-                                provider.time(p2p_event(pos - 1, "b")), r, d)
-                            arr_b[(r, pos - 1, t.micro)] = end + pt
-                            acts.append(Activity(
-                                device=r * pp + d,
-                                name=f"P2P:b:s{pos}:m{t.micro}",
-                                kind="P2P", start=end, end=end + pt,
-                                stage=pos, micro=t.micro))
-                    ptr[(r, d)] += 1
-                    done += 1
-                    progress = True
-        if not progress:
-            raise RuntimeError(
-                f"pipeline schedule deadlock: {strat.label()} "
-                f"{strat.schedule} done={done}/{total}")
-
-    # ---------------- DP level: gradient sync + optimizer ----------------
-    chip = cluster.chip
-    for d in range(pp):
-        pos_list = [c * pp + d for c in range(vpp) if c * pp + d < n_pos]
-        pbytes = sum(stages[p].param_bytes for p in pos_list) / max(1, strat.mp)
-        pbytes *= strat.grad_compress       # int8 compression what-if
-        # asynchronous pipelining (PipeDream): no global weight sync —
-        # each device steps its optimizer immediately (paper §7)
-        sync = dp > 1 and strat.schedule != "pipedream"
-        sync_start = max(free[(r, d)] for r in range(dp))
-        for r in range(dp):
-            t0 = max(free[(r, d)], sync_start if sync else free[(r, d)])
-            if sync:
-                span = dp * pp * strat.mp
-                scope = ("intra" if span <= cluster.devices_per_island
-                         else "inter")
-                if strat.zero1:
-                    ar = (provider.time(Event(
-                        kind="collective", name=f"dp_rs:d{d}",
-                        coll_op="reduce_scatter", nbytes=pbytes,
-                        n_dev=dp, scope=scope))
-                        + provider.time(Event(
-                            kind="collective", name=f"dp_ag:d{d}",
-                            coll_op="all_gather", nbytes=pbytes,
-                            n_dev=dp, scope=scope)))
-                else:
-                    ar = provider.time(Event(
-                        kind="collective", name=f"dp_ar:d{d}",
-                        coll_op="all_reduce", nbytes=pbytes,
-                        n_dev=dp, scope=scope))
-                ar = jit.draw(ar, r, d)
-                acts.append(Activity(device=r * pp + d, name=f"AR:d{d}",
-                                     kind="AR", start=t0, end=t0 + ar,
-                                     stage=d))
-                t0 += ar
-            # AdamW: streams fp32 master params + m + v (~6 passes of 2x)
-            opt_bytes = pbytes * (1 if not strat.zero1 else 1.0 / dp)
-            opt = jit.draw(6.0 * opt_bytes * 2 / chip.hbm_bw, r, d)
-            acts.append(Activity(device=r * pp + d, name=f"OPT:d{d}",
-                                 kind="OPT", start=t0, end=t0 + opt,
-                                 stage=d))
-            free[(r, d)] = t0 + opt
-
-    # ---------------- replicate over MP ranks ----------------
-    out: List[Activity] = []
-    mp = strat.mp
-    for a in acts:
-        base = a.device * mp
-        for j in range(mp):
-            off = 0.0
-            if rng is not None and clock_sigma > 0:
-                off = clock_sigma * rng.randn()
-            out.append(dataclasses.replace(
-                a, device=base + j, start=a.start + off, end=a.end + off))
-    return Timeline(out, n_devices=dp * pp * mp)
+    """One-shot timeline construction (API-compatible with the seed)."""
+    if positions is None:
+        microbatch = max(1, global_batch // (strat.dp * strat.microbatches))
+        positions = build_positions(cfg, strat, microbatch, seq,
+                                    provider.cluster)
+    engine = EventFlowEngine(positions, strat, provider)
+    return engine.run(jitter_sigma=jitter_sigma,
+                      straggler_sigma=straggler_sigma,
+                      clock_sigma=clock_sigma, seed=seed)

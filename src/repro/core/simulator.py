@@ -16,9 +16,10 @@ from typing import Dict, List, Optional
 
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import V5E_POD
+from repro.core.engine import EventFlowEngine
 from repro.core.events import (Stage, Strategy, build_stage_events,
                                unique_events)
-from repro.core.hierarchy import build_positions, construct_timeline
+from repro.core.hierarchy import build_positions
 from repro.core.profiler import (AnalyticalProvider, Provider,
                                  profile_events, profiling_cost)
 from repro.core.timeline import Timeline
@@ -43,6 +44,9 @@ class DistSim:
         self.global_batch = global_batch
         self.seq = seq
         self.provider = provider or AnalyticalProvider(V5E_POD)
+        self._default_engine: Optional[EventFlowEngine] = None
+        self._engine: Optional[EventFlowEngine] = None
+        self._engine_src: Optional[List[Stage]] = None
         if global_batch % (strategy.dp * strategy.microbatches):
             raise ValueError(
                 f"global_batch {global_batch} not divisible by "
@@ -50,21 +54,16 @@ class DistSim:
 
     # ---- the performance model ----
     def predict(self, positions: Optional[List[Stage]] = None) -> SimResult:
-        tl = construct_timeline(self.cfg, self.strategy, self.global_batch,
-                                self.seq, self.provider, positions=positions)
-        return self._result(tl)
+        return self._result(self.engine(positions).run())
 
     # ---- the "actual run" oracle ----
     def replay(self, seed: int = 0, jitter_sigma: float = 0.025,
                straggler_sigma: float = 0.0,
                clock_sigma: float = 0.0,
                positions: Optional[List[Stage]] = None) -> SimResult:
-        tl = construct_timeline(self.cfg, self.strategy, self.global_batch,
-                                self.seq, self.provider,
-                                jitter_sigma=jitter_sigma,
-                                straggler_sigma=straggler_sigma,
-                                clock_sigma=clock_sigma, seed=seed,
-                                positions=positions)
+        tl = self.engine(positions).run(jitter_sigma=jitter_sigma,
+                                        straggler_sigma=straggler_sigma,
+                                        clock_sigma=clock_sigma, seed=seed)
         return self._result(tl)
 
     # ---- conformance hook (repro.validate) ----
@@ -72,14 +71,15 @@ class DistSim:
                            straggler_sigma: float = 0.0,
                            clock_sigma: float = 0.0):
         """One prediction plus a replay per seed, all sharing a single
-        positions build — the per-cell unit of the accuracy sweep.
+        event-flow engine (one positions build, one event profile) —
+        the per-cell unit of the accuracy sweep.
         Returns ``(pred, [replay_0, ...])``."""
-        positions = self.positions()
-        pred = self.predict(positions=positions)
-        replays = [self.replay(seed=s, jitter_sigma=jitter_sigma,
-                               straggler_sigma=straggler_sigma,
-                               clock_sigma=clock_sigma,
-                               positions=positions)
+        engine = self.engine()
+        pred = self._result(engine.run())
+        replays = [self._result(engine.run(jitter_sigma=jitter_sigma,
+                                           straggler_sigma=straggler_sigma,
+                                           clock_sigma=clock_sigma,
+                                           seed=s))
                    for s in seeds]
         return pred, replays
 
@@ -95,15 +95,33 @@ class DistSim:
         return build_positions(self.cfg, self.strategy, self.microbatch(),
                                self.seq, self.provider.cluster)
 
+    def engine(self, positions: Optional[List[Stage]] = None
+               ) -> EventFlowEngine:
+        """Event-flow engine for this sim. Reused across predict/replay
+        calls (one slot for the default positions build, one keyed on
+        the caller's positions list) so the per-strategy schedule +
+        event-mean precomputation runs once per positions set."""
+        if positions is None:
+            if self._default_engine is None:
+                self._default_engine = EventFlowEngine(
+                    self.positions(), self.strategy, self.provider)
+            return self._default_engine
+        if self._engine_src is not positions:
+            self._engine = EventFlowEngine(positions, self.strategy,
+                                           self.provider)
+            self._engine_src = positions
+        return self._engine
+
     def _result(self, tl: Timeline) -> SimResult:
         bt = tl.batch_time
+        util = tl.utilization()
         return SimResult(
             timeline=tl,
             batch_time=bt,
             throughput_iters=1.0 / bt if bt else 0.0,
             throughput_tokens=self.global_batch * self.seq / bt if bt else 0,
-            utilization=tl.utilization(),
-            bubble_fraction=tl.bubble_fraction(),
+            utilization=util,
+            bubble_fraction=tl.bubble_fraction(util),
         )
 
     # ---- Table 3 accounting ----

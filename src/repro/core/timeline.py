@@ -48,13 +48,20 @@ class Timeline:
                    if a.device == device and a.kind in kinds)
 
     def utilization(self) -> Dict[int, float]:
-        """Per-device busy fraction. Devices with no activities — e.g.
-        degenerate pp stages that got no layers and hence no OPT events —
-        report 0.0, including on a fully empty timeline (batch_time 0)."""
+        """Per-device busy fraction in ONE pass over the activities
+        (``busy_time`` per device would be O(devices x activities) — it
+        dominated 4096-device timelines). Devices with no activities —
+        e.g. degenerate pp stages that got no layers and hence no OPT
+        events — report 0.0, including on a fully empty timeline
+        (batch_time 0)."""
         bt = self.batch_time
         if bt <= 0.0:
             return {d: 0.0 for d in range(self.n_devices)}
-        return {d: self.busy_time(d) / bt for d in range(self.n_devices)}
+        busy = [0.0] * self.n_devices
+        for a in self.activities:
+            if a.kind in ("F", "B", "AR", "OPT"):
+                busy[a.device] += a.end - a.start
+        return {d: busy[d] / bt for d in range(self.n_devices)}
 
     def bubble_fraction(self, util: Optional[Dict[int, float]] = None
                         ) -> float:
@@ -70,6 +77,53 @@ class Timeline:
         """(device, name) → activity, compute events only."""
         return {(a.device, a.name): a for a in self.activities
                 if a.kind in ("F", "B")}
+
+
+class LazyTimeline(Timeline):
+    """Timeline whose activity list is materialized on first access.
+
+    The event-flow engine knows the aggregate stats (batch time,
+    per-device busy time) directly from its per-device arrays, so the
+    O(devices x tasks) Python ``Activity`` construction is deferred
+    until something actually iterates the activities (per-activity
+    error metrics, trace export). ``DistSim.predict()`` on a
+    4096-device strategy never pays it.
+    """
+
+    def __init__(self, n_devices: int, builder, batch_time: float,
+                 busy: List[float]):
+        # deliberately does NOT call the dataclass __init__: the
+        # ``activities`` field is served by the property below.
+        self.n_devices = n_devices
+        self._builder = builder
+        self._acts: Optional[List[Activity]] = None
+        self._batch_time = batch_time
+        self._busy = busy                  # per-device busy seconds
+
+    @property
+    def activities(self) -> List[Activity]:
+        if self._acts is None:
+            self._acts = self._builder()
+            self._builder = None       # release the engine state it closed over
+        return self._acts
+
+    @property
+    def batch_time(self) -> float:
+        return self._batch_time
+
+    def utilization(self) -> Dict[int, float]:
+        bt = self._batch_time
+        if bt <= 0.0:
+            return {d: 0.0 for d in range(self.n_devices)}
+        return {d: self._busy[d] / bt for d in range(self.n_devices)}
+
+    def bubble_fraction(self, util: Optional[Dict[int, float]] = None
+                        ) -> float:
+        # engine timelines always carry OPT activities, so the parent's
+        # empty-list early-out (which would materialize) can't apply
+        if util is None:
+            util = self.utilization()
+        return 1.0 - sum(util.values()) / max(1, len(util))
 
 
 # --------------------------------------------------------------------------

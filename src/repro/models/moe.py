@@ -35,6 +35,24 @@ def capacity(n_tokens: int, mcfg: MoEConfig) -> int:
     return min(n_tokens, c)
 
 
+def dropless_capacity_factor(mcfg: MoEConfig) -> float:
+    """A capacity factor at which ``capacity(t, mcfg) == t`` for every
+    t — no token can ever be dropped. Nominally n_experts / top_k; a
+    tiny relative cushion keeps ``int(t * top_k * cf / n_experts)``
+    from truncating below t when n_experts isn't divisible by top_k.
+
+    Capacity-factor routing is NON-CAUSAL along the sequence: the
+    per-expert argsort competes ALL tokens (including future positions)
+    for cap slots, so whether token t survives depends on tokens after
+    it. Batched (teacher-forced) forward therefore cannot be reproduced
+    by token-by-token decode whenever any expert oversubscribes — decode
+    sees a different competitor set by construction. With a dropless
+    capacity the competition never binds and the two paths agree exactly
+    (see tests/test_decode_consistency.py).
+    """
+    return mcfg.n_experts / mcfg.top_k * (1.0 + 1e-6)
+
+
 def router_probs(x2d: jax.Array, router_w: jax.Array, mcfg: MoEConfig):
     """x2d: (T, d) → (T, E) softmax probs (f32), top-k indices/weights."""
     logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32),

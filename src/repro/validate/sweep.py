@@ -138,10 +138,11 @@ def smoke_matrix() -> List[ValidationCell]:
     """The CI gate: every model family x every schedule x dp/tp/pp mix,
     small enough to sweep in seconds on one CPU."""
     return [
-        # gpt2_345m — dense decoder, all three schedules + pure DP
+        # gpt2_345m — dense decoder, all four schedules + pure DP
         _cell("gpt2_345m", 1, 2, 2, 4, "1f1b"),
         _cell("gpt2_345m", 1, 4, 1, 8, "gpipe"),
         _cell("gpt2_345m", 2, 2, 1, 4, "interleaved", vpp=2),
+        _cell("gpt2_345m", 1, 2, 2, 4, "pipedream"),
         _cell("gpt2_345m", 1, 1, 4, 2, "1f1b"),
         # bert_large — dense encoder, tp+pp+dp hybrid
         _cell("bert_large", 2, 2, 2, 4, "1f1b"),
@@ -168,7 +169,7 @@ def full_matrix() -> List[ValidationCell]:
         for mp, pp, dp, m in strategies:
             if gb % (dp * m):
                 continue
-            for schedule in ("gpipe", "1f1b", "interleaved"):
+            for schedule in ("gpipe", "1f1b", "interleaved", "pipedream"):
                 vpp = 2 if schedule == "interleaved" and pp > 1 else 1
                 out.append(_cell(arch, mp, pp, dp, m, schedule, vpp=vpp,
                                  gb=gb, smoke=smoke))

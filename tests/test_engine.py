@@ -1,0 +1,251 @@
+"""Event-flow engine: differential tests against the historical polling
+scheduler, the two replay-oracle bugfixes, analytic DP replication, and
+the lazy array-backed timeline stats."""
+import math
+
+import pytest
+
+from repro.configs.base import get_config, smoke_config
+from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim,
+                        EventFlowEngine, Strategy)
+from repro.core._polling_reference import construct_timeline_polling
+
+CFG = get_config("gpt2_345m")
+PROVIDER = AnalyticalProvider(A40_CLUSTER)
+
+STRATS = [
+    Strategy(mp=1, pp=2, dp=2, microbatches=4),
+    Strategy(mp=1, pp=4, dp=1, microbatches=8, schedule="gpipe"),
+    Strategy(mp=2, pp=2, dp=1, microbatches=4, schedule="interleaved",
+             vpp=2),
+    Strategy(mp=1, pp=1, dp=4, microbatches=2),
+    Strategy(mp=2, pp=2, dp=2, microbatches=4, zero1=True),
+    Strategy(mp=1, pp=2, dp=2, microbatches=4, schedule="pipedream"),
+    Strategy(mp=1, pp=4, dp=2, microbatches=8, schedule="interleaved",
+             vpp=3),
+    Strategy(mp=1, pp=2, dp=2, microbatches=4, grad_compress=0.25),
+]
+
+
+def _key(tl):
+    return sorted((a.device, a.name, a.kind, a.start, a.end, a.stage,
+                   a.micro) for a in tl.activities)
+
+
+@pytest.mark.parametrize("strat", STRATS, ids=lambda s: f"{s.label()}-"
+                         f"{s.schedule}-v{s.vpp}-z{int(s.zero1)}")
+def test_predict_bit_identical_to_polling_scheduler(strat):
+    """Zero-noise timelines must match the seed scheduler bit-for-bit —
+    the goldens-regeneration argument rests on this: any predict-side
+    drift would be an engine bug, not a replay-oracle bugfix."""
+    gb = strat.dp * strat.microbatches * 2
+    sim = DistSim(CFG, strat, gb, 128, PROVIDER)
+    new = sim.predict().timeline
+    old = construct_timeline_polling(CFG, strat, gb, 128, PROVIDER)
+    assert new.n_devices == old.n_devices
+    assert _key(new) == _key(old)
+
+
+def test_predict_bit_identical_with_empty_stages():
+    """pp > layer count: trailing positions own no layers."""
+    cfg = smoke_config(get_config("gpt2_345m"))    # 2 layers
+    strat = Strategy(pp=4, microbatches=4)
+    sim = DistSim(cfg, strat, 4, 64, PROVIDER)
+    new = sim.predict().timeline
+    old = construct_timeline_polling(cfg, strat, 4, 64, PROVIDER)
+    assert _key(new) == _key(old)
+
+
+# --------------------------------------------------------------------------
+# replay-oracle bugfixes
+# --------------------------------------------------------------------------
+
+def _sim(mp=2, pp=2, dp=2, m=4, schedule="1f1b"):
+    return DistSim(CFG, Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
+                                 schedule=schedule), dp * m, 128, PROVIDER)
+
+
+def test_clock_skew_constant_per_device():
+    """Fix: clock_sigma is ONE offset per (replica, device, mp rank) per
+    run, applied to every activity of that device — not an independent
+    draw per activity (that's jitter, and it's already modeled)."""
+    sim = _sim()
+    base = sim.replay(seed=7).timeline.by_device()
+    skew = sim.replay(seed=7, clock_sigma=1e-3).timeline.by_device()
+    offsets = set()
+    for dev in base:
+        per_dev = {round(a.start - b.start, 12)
+                   for a, b in zip(skew[dev], base[dev])}
+        per_dev |= {round(a.end - b.end, 12)
+                    for a, b in zip(skew[dev], base[dev])}
+        assert len(per_dev) == 1, f"device {dev} offset not constant"
+        offsets |= per_dev
+    assert len(offsets) > 1          # ...but devices do disagree
+
+
+def test_dp_allreduce_synchronizes_replicas():
+    """Fix: a blocking all-reduce completes when the slowest participant
+    does — every replica of a device slot must exit at the same time."""
+    sim = _sim(dp=4)
+    tl = sim.replay(seed=3).timeline
+    by_stage = {}
+    for a in tl.activities:
+        if a.kind == "AR":
+            by_stage.setdefault(a.stage, []).append(a)
+    assert by_stage
+    for d, ars in by_stage.items():
+        assert len(ars) == 4 * 2     # dp replicas x mp ranks
+        assert len({round(a.start, 12) for a in ars}) == 1
+        assert len({round(a.end, 12) for a in ars}) == 1
+
+
+def test_ar_end_is_max_of_replica_draws():
+    """The common AR end must be start + max over per-replica draws:
+    strictly larger than the zero-jitter span for some seed."""
+    sim = _sim(dp=4)
+    pred = sim.predict().timeline
+    pred_span = {a.stage: a.end - a.start for a in pred.activities
+                 if a.kind == "AR"}
+    tl = sim.replay(seed=11).timeline
+    spans = {a.stage: a.end - a.start for a in tl.activities
+             if a.kind == "AR"}
+    assert any(spans[d] > pred_span[d] for d in spans)
+
+
+# --------------------------------------------------------------------------
+# analytic DP replication (predict path independent of dp)
+# --------------------------------------------------------------------------
+
+def test_predict_simulates_single_replica(monkeypatch):
+    sim = _sim(dp=4)
+    engine = sim.engine()
+    calls = []
+    orig = EventFlowEngine._simulate_replica
+
+    def counting(self, *a, **k):
+        calls.append(1)
+        return orig(self, *a, **k)
+
+    monkeypatch.setattr(EventFlowEngine, "_simulate_replica", counting)
+    engine.run()
+    assert len(calls) == 1           # dp=4 replicated analytically
+    calls.clear()
+    engine.run(jitter_sigma=0.025, seed=0)
+    assert len(calls) == 4           # noisy replicas diverge: all simulated
+
+
+def test_replicas_identical_under_zero_noise():
+    sim = _sim(dp=3, mp=1)
+    tl = sim.predict().timeline
+    pp = 2
+    by_dev = tl.by_device()
+    ref = [(a.name, a.kind, round(a.start, 12), round(a.end, 12))
+           for a in by_dev[0]]
+    for r in (1, 2):
+        rep = [(a.name, a.kind, round(a.start, 12), round(a.end, 12))
+               for a in by_dev[r * pp]]
+        assert rep == ref
+
+
+# --------------------------------------------------------------------------
+# determinism + RNG hygiene
+# --------------------------------------------------------------------------
+
+def test_replay_deterministic_per_seed():
+    sim = _sim()
+    a = sim.replay(seed=5).timeline
+    b = sim.replay(seed=5).timeline
+    assert _key(a) == _key(b)
+    c = sim.replay(seed=6).timeline
+    assert _key(a) != _key(c)
+
+
+def test_zero_noise_replay_equals_predict():
+    sim = _sim()
+    pred = sim.predict().timeline
+    rep = sim.replay(seed=0, jitter_sigma=0.0).timeline
+    assert _key(pred) == _key(rep)
+
+
+def test_straggler_only_slows_one_device_everywhere():
+    """straggler_sigma scales ALL of a device's event durations by one
+    factor >= 1; batch time can only grow."""
+    sim = _sim()
+    pred = sim.predict()
+    slow = sim.replay(seed=2, jitter_sigma=0.0, straggler_sigma=0.3)
+    assert slow.batch_time >= pred.batch_time
+
+
+# --------------------------------------------------------------------------
+# lazy timeline stats
+# --------------------------------------------------------------------------
+
+def test_lazy_stats_match_materialized():
+    """batch_time/utilization computed from engine arrays must agree
+    with recomputing them from the materialized activity list."""
+    from repro.core.timeline import Timeline
+    for strat in (Strategy(mp=2, pp=2, dp=2, microbatches=4),
+                  Strategy(pp=2, dp=2, microbatches=4,
+                           schedule="pipedream")):
+        sim = DistSim(CFG, strat, 8, 128, PROVIDER)
+        for tl in (sim.predict().timeline,
+                   sim.replay(seed=1, clock_sigma=1e-4).timeline):
+            flat = Timeline(list(tl.activities), n_devices=tl.n_devices)
+            assert tl.batch_time == pytest.approx(flat.batch_time,
+                                                  rel=0, abs=0)
+            lazy_u, flat_u = tl.utilization(), flat.utilization()
+            assert set(lazy_u) == set(flat_u)
+            for d in flat_u:
+                assert lazy_u[d] == pytest.approx(flat_u[d], abs=1e-12)
+            assert tl.bubble_fraction() == pytest.approx(
+                flat.bubble_fraction(), abs=1e-12)
+
+
+def test_lazy_timeline_materializes_once():
+    sim = _sim()
+    tl = sim.predict().timeline
+    first = tl.activities
+    assert tl.activities is first
+
+
+def test_engine_cache_custom_positions_do_not_shadow_default():
+    """predict(positions=custom) must not poison later positions-free
+    calls: they rebuild from the sim's own positions()."""
+    from repro.core.hierarchy import build_positions
+    sim = _sim()
+    default_bt = sim.predict().batch_time
+    # same pp*vpp stage count, different (smaller) model -> different times
+    custom = build_positions(smoke_config(CFG), sim.strategy, 1, 128,
+                             PROVIDER.cluster)
+    custom_bt = sim.predict(positions=custom).batch_time
+    assert custom_bt != default_bt
+    assert sim.predict().batch_time == default_bt
+    assert sim.engine() is not sim.engine(custom)
+
+
+# --------------------------------------------------------------------------
+# failure modes
+# --------------------------------------------------------------------------
+
+def test_deadlocked_schedule_raises():
+    """A schedule whose head task's input can never arrive must raise,
+    not hang or silently drop tasks."""
+    sim = _sim(pp=2, dp=1, m=2)
+    engine = sim.engine()
+    # reverse device 1's task list: its first task now needs an arrival
+    # that is only produced after its own later tasks ran
+    engine.task_isf[1] = engine.task_isf[1][::-1]
+    engine.task_pos[1] = engine.task_pos[1][::-1]
+    engine.task_micro[1] = engine.task_micro[1][::-1]
+    engine.task_name[1] = engine.task_name[1][::-1]
+    engine.task_p2p_name[1] = engine.task_p2p_name[1][::-1]
+    with pytest.raises(RuntimeError, match="deadlock"):
+        engine.run()
+
+
+def test_nan_free_timelines():
+    sim = _sim(dp=2)
+    for tl in (sim.predict().timeline, sim.replay(seed=0).timeline):
+        for a in tl.activities:
+            assert not math.isnan(a.start) and not math.isnan(a.end)
+            assert a.end >= a.start - 1e-12

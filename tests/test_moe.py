@@ -62,6 +62,23 @@ def test_capacity_bounds():
     assert c >= 1024 * 2 // 8
 
 
+def test_dropless_capacity_factor_exact_for_any_expert_count():
+    """capacity(t) == t must hold even when n_experts isn't divisible
+    by top_k — a bare E/k factor truncates below t via the int() cast
+    (e.g. E=17, k=7, t=49 gave capacity 48)."""
+    from repro.models.moe import dropless_capacity_factor
+    import dataclasses
+    for e in (3, 4, 7, 16, 17, 64):
+        for k in (1, 2, 3, 5, 7):
+            if k > e:
+                continue
+            mcfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=8)
+            mcfg = dataclasses.replace(
+                mcfg, capacity_factor=dropless_capacity_factor(mcfg))
+            for t in (1, 2, 7, 32, 49, 333, 4096):
+                assert capacity(t, mcfg) == t, (e, k, t)
+
+
 def test_grad_flows_through_gates():
     from repro.models.moe import moe_ffn
     x, params, mcfg = _setup(jax.random.PRNGKey(2), 32, 8, 4, 16, 2)

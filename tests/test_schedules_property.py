@@ -14,7 +14,7 @@ PROVIDER = AnalyticalProvider(A40_CLUSTER)
 
 
 @hp.given(pp=st.integers(1, 8), m=st.integers(1, 16),
-          name=st.sampled_from(["gpipe", "1f1b"]))
+          name=st.sampled_from(["gpipe", "1f1b", "pipedream"]))
 @hp.settings(max_examples=40, deadline=None)
 def test_schedule_task_counts(pp, m, name):
     sched = build_schedule(name, pp, m)
@@ -41,7 +41,7 @@ def test_interleaved_task_counts(pp, m, vpp):
 @hp.settings(max_examples=30, deadline=None)
 def test_backward_after_forward_same_stage(pp, m):
     """On every device, B(micro) appears after F(micro)."""
-    for name in ("gpipe", "1f1b"):
+    for name in ("gpipe", "1f1b", "pipedream"):
         for tasks in build_schedule(name, pp, m):
             seen_f = set()
             for t in tasks:
@@ -54,7 +54,7 @@ def test_backward_after_forward_same_stage(pp, m):
 @hp.given(pp=st.sampled_from([1, 2, 4]), dp=st.sampled_from([1, 2]),
           mp=st.sampled_from([1, 2]),
           m=st.sampled_from([1, 2, 4]),
-          schedule=st.sampled_from(["gpipe", "1f1b"]))
+          schedule=st.sampled_from(["gpipe", "1f1b", "pipedream"]))
 @hp.settings(max_examples=20, deadline=None)
 def test_timeline_constructs_without_deadlock(pp, dp, mp, m, schedule):
     """Any feasible strategy builds a valid timeline: no deadlock, no
@@ -72,7 +72,8 @@ def test_timeline_constructs_without_deadlock(pp, dp, mp, m, schedule):
 
 
 @hp.given(pp=st.integers(1, 6), m=st.integers(1, 12), vpp=st.integers(1, 3),
-          name=st.sampled_from(["gpipe", "1f1b", "interleaved"]))
+          name=st.sampled_from(["gpipe", "1f1b", "interleaved",
+                                "pipedream"]))
 @hp.settings(max_examples=40, deadline=None)
 def test_task_instances_unique_per_stage(pp, m, vpp, name):
     """Invariant: every (phase, micro, chunk) appears exactly once per
@@ -109,6 +110,21 @@ def test_interleaved_covers_all_chunks(pp, m, vpp):
                 (i, c) for i in range(m) for c in range(vpp))
             assert {t.chunk for t in tasks if t.phase == phase} \
                 == set(range(vpp))
+
+
+@hp.given(pp=st.integers(1, 8), m=st.integers(1, 16))
+@hp.settings(max_examples=40, deadline=None)
+def test_pipedream_in_flight_bounded_and_drained(pp, m):
+    """PipeDream steady state: device d keeps at most min(m, pp - d)
+    microbatches in flight (its deeper warmup), and one modeled epoch
+    drains completely."""
+    for d, tasks in enumerate(build_schedule("pipedream", pp, m)):
+        in_flight = peak = 0
+        for t in tasks:
+            in_flight += 1 if t.phase == "F" else -1
+            peak = max(peak, in_flight)
+        assert peak <= min(m, pp - d)
+        assert in_flight == 0
 
 
 @hp.given(m=st.sampled_from([2, 4, 8]), seed=st.integers(0, 5))
