@@ -3,9 +3,17 @@
 Measures the event-flow engine (``repro.core.engine``) against the
 historical polling scheduler (``repro.core._polling_reference``) and
 records scaling: the predict path at >= 4096 devices and the replay
-oracle at >= 1024 devices. Exits non-zero if the engine is less than
-10x faster than the polling scheduler on the 1024-device predict path
-(the PR acceptance gate).
+oracle at >= 1024 devices. A second section measures **seed scaling**:
+one full validation-cell evaluation (predict + S replay seeds +
+metrics, ``repro.validate.run_cell``) with the batched array-native
+path vs the historical one-``run()``-per-seed loop.
+
+Two CI gates, both exiting non-zero on breach:
+
+* engine predict >= 10x faster than the polling scheduler at 1024
+  devices;
+* batched multi-seed replay >= 5x faster than the sequential replay
+  loop at S=8 seeds on the 1024-device cell.
 
     PYTHONPATH=src python benchmarks/bench_timeline.py --smoke
     PYTHONPATH=src python benchmarks/bench_timeline.py --full
@@ -21,11 +29,15 @@ import time
 from repro.configs.base import get_config
 from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim, Strategy
 from repro.core._polling_reference import construct_timeline_polling
+from repro.validate import run_cell
+from repro.validate.sweep import ValidationCell
 
 MODEL = "gpt2_345m"
 SEQ = 128
 GATE_DEVICES = 1024
 GATE_SPEEDUP = 10.0
+SEED_GATE_S = 8
+SEED_GATE_SPEEDUP = 5.0
 
 #: devices -> (mp, pp, dp, m); devices = mp * pp * dp
 SIZES = {
@@ -99,6 +111,31 @@ def bench_cell(cfg, provider, devices: int, with_polling: bool,
     return cell
 
 
+def bench_seed_scaling(provider, devices: int, s_list, baseline_s) -> list:
+    """Validation-cell evaluation (predict + S replays + metrics) at
+    one strategy size: batched vs sequential ``run_cell``. The
+    sequential baseline is only timed for ``baseline_s`` (it is the
+    slow path being replaced — 8 seeds at 1024 devices take seconds)."""
+    mp, pp, dp, m = SIZES[devices]
+    strat = Strategy(mp=mp, pp=pp, dp=dp, microbatches=m)
+    cell = ValidationCell(MODEL, strat, global_batch=dp * m, seq=SEQ)
+    run_cell(cell, provider, seeds=(0,), batched=True)   # warm caches
+    rows = []
+    for S in s_list:
+        seeds = tuple(range(S))
+        t0 = time.perf_counter()
+        run_cell(cell, provider, seeds=seeds, batched=True)
+        t_batched = time.perf_counter() - t0
+        row = {"devices": devices, "seeds": S, "batched_s": t_batched}
+        if S in baseline_s:
+            t0 = time.perf_counter()
+            run_cell(cell, provider, seeds=seeds, batched=False)
+            row["sequential_s"] = time.perf_counter() - t0
+            row["speedup"] = row["sequential_s"] / t_batched
+        rows.append(row)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     mode = ap.add_mutually_exclusive_group()
@@ -140,30 +177,74 @@ def main() -> None:
                  f"{'—':>8} {'—':>8}"))
     print(f"\nswept {len(cells)} sizes in {wall:.1f}s")
 
+    # ---- seed scaling: batched multi-seed replay vs sequential loop ----
+    if args.full:
+        seed_plan = [(1024, (1, 2, 4, 8, 16), (1, 8, 16)),
+                     (4096, (8,), (8,))]
+    else:
+        seed_plan = [(256, (1, 2, 4, 8), (1, 8)),
+                     (1024, (8,), (8,))]
+    t0 = time.perf_counter()
+    seed_rows = []
+    for devices, s_list, baseline_s in seed_plan:
+        seed_rows.extend(bench_seed_scaling(provider, devices, s_list,
+                                            baseline_s))
+    seed_wall = time.perf_counter() - t0
+
+    print(f"\nseed scaling — validation cell (predict + S replays + "
+          f"metrics), batched vs sequential\n\n"
+          f"{'devices':>8} {'seeds':>6} {'batched':>10} "
+          f"{'sequential':>11} {'speedup':>8}")
+    for r in seed_rows:
+        print(f"{r['devices']:>8} {r['seeds']:>6} "
+              f"{r['batched_s'] * 1e3:>8.1f}ms "
+              + (f"{r['sequential_s'] * 1e3:>9.1f}ms "
+                 f"{r['speedup']:>7.1f}x" if "speedup" in r
+                 else f"{'—':>11} {'—':>8}"))
+    print(f"\nseed scaling swept in {seed_wall:.1f}s")
+
     gate = next(c for c in cells if c["devices"] == GATE_DEVICES)
+    seed_gate = next(r for r in seed_rows
+                     if r["devices"] == GATE_DEVICES
+                     and r["seeds"] == SEED_GATE_S)
     report = {
-        "schema": 1,
+        "schema": 2,
         "model": MODEL,
         "cluster": A40_CLUSTER.name,
         "mode": "full" if args.full else "smoke",
         "gate": {"devices": GATE_DEVICES, "required_speedup": GATE_SPEEDUP,
                  "speedup_predict": gate["speedup_predict"],
                  "speedup_replay": gate["speedup_replay"]},
+        "seed_gate": {"devices": GATE_DEVICES, "seeds": SEED_GATE_S,
+                      "required_speedup": SEED_GATE_SPEEDUP,
+                      "speedup": seed_gate["speedup"]},
         "cells": cells,
+        "seed_scaling": seed_rows,
     }
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)
         print(f"report written to {args.out}")
 
+    failed = False
     if gate["speedup_predict"] < GATE_SPEEDUP:
         print(f"bench_timeline/ERROR: predict speedup "
               f"{gate['speedup_predict']:.1f}x < {GATE_SPEEDUP}x at "
               f"{GATE_DEVICES} devices", file=sys.stderr)
+        failed = True
+    if seed_gate["speedup"] < SEED_GATE_SPEEDUP:
+        print(f"bench_timeline/ERROR: batched-replay speedup "
+              f"{seed_gate['speedup']:.1f}x < {SEED_GATE_SPEEDUP}x at "
+              f"S={SEED_GATE_S} seeds, {GATE_DEVICES} devices",
+              file=sys.stderr)
+        failed = True
+    if failed:
         sys.exit(1)
-    print(f"gate OK: {gate['speedup_predict']:.0f}x predict / "
-          f"{gate['speedup_replay']:.0f}x replay speedup at "
-          f"{GATE_DEVICES} devices (gate: {GATE_SPEEDUP:.0f}x predict)")
+    print(f"gates OK: {gate['speedup_predict']:.0f}x predict / "
+          f"{gate['speedup_replay']:.0f}x replay vs polling at "
+          f"{GATE_DEVICES} devices (gate: {GATE_SPEEDUP:.0f}x); "
+          f"{seed_gate['speedup']:.0f}x batched replay at "
+          f"S={SEED_GATE_S} seeds (gate: {SEED_GATE_SPEEDUP:.0f}x)")
 
 
 if __name__ == "__main__":

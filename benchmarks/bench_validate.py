@@ -44,6 +44,10 @@ def main() -> None:
                     help="report path ('' to skip writing)")
     ap.add_argument("--update-goldens", action="store_true",
                     help=f"rewrite {os.path.normpath(GOLDEN_PATH)}")
+    ap.add_argument("--sequential", action="store_true",
+                    help="legacy one-replay-per-seed path with "
+                         "materialized-activity metrics (A/B baseline; "
+                         "the default is one batched replay per cell)")
     args = ap.parse_args()
     if args.update_goldens and (
             args.full or args.seeds != "0,1,2"
@@ -66,12 +70,14 @@ def main() -> None:
 
     t0 = time.perf_counter()
     result = run_sweep(cells, cluster=args.cluster, seeds=seeds,
-                       thresholds=thr, jitter_sigma=args.jitter)
+                       thresholds=thr, jitter_sigma=args.jitter,
+                       batched=not args.sequential)
     wall = time.perf_counter() - t0
 
     print(format_validation_report(result))
     print(f"\nswept {len(result.cells)} cells x {len(seeds)} seeds "
-          f"in {wall:.2f}s ({len(result.cells) / wall:.1f} cells/s)")
+          f"in {wall:.2f}s ({len(result.cells) / wall:.1f} cells/s, "
+          f"{'sequential replay' if args.sequential else 'batched replay'})")
 
     if args.update_goldens:
         path = os.path.normpath(GOLDEN_PATH)

@@ -16,7 +16,8 @@ from repro.core.costmodel import (ClusterSpec, CLUSTERS, V5E_POD,
                                   get_cluster, p2p_time)
 from repro.core.profiler import (AnalyticalProvider, MeasuredProvider,
                                  Provider, ProviderStats, profiling_cost)
-from repro.core.timeline import (Timeline, Activity, batch_time_error,
+from repro.core.timeline import (Timeline, Activity, LazyTimeline,
+                                 TimelineBatch, batch_time_error,
                                  activity_error, per_stage_error)
 
 __all__ = [
@@ -25,6 +26,7 @@ __all__ = [
     "grid_search", "SearchEntry", "ClusterSpec", "CLUSTERS", "V5E_POD",
     "A40_CLUSTER", "get_cluster", "AnalyticalProvider", "MeasuredProvider",
     "Provider", "ProviderStats", "profiling_cost",
-    "Timeline", "Activity", "batch_time_error", "activity_error",
+    "Timeline", "Activity", "LazyTimeline", "TimelineBatch",
+    "batch_time_error", "activity_error",
     "per_stage_error", "collective_time", "p2p_time",
 ]

@@ -38,6 +38,7 @@ DP-sync factors → optimizer factors → clock offsets.
 from __future__ import annotations
 
 import heapq
+from collections import deque
 from math import isnan
 from typing import List, Optional, Sequence, Tuple
 
@@ -46,7 +47,8 @@ import numpy as np
 from repro.core.events import Event, Stage, Strategy
 from repro.core.profiler import Provider
 from repro.core.schedules import build_schedule
-from repro.core.timeline import Activity, LazyTimeline, Timeline
+from repro.core.timeline import (Activity, LazyTimeline, Timeline,
+                                 TimelineBatch)
 
 _MIN_JITTER_FACTOR = 0.05       # clamp: an event never runs 20x faster
 
@@ -165,6 +167,7 @@ class EventFlowEngine:
                     p2p.append(None)
             self.task_p2p_name.append(p2p)
         self.total_tasks = sum(len(t) for t in self.task_isf)
+        self._topo: Optional[List[Tuple[int, int]]] = None
 
     # ------------------------------------------------------------------
     # noise sampling (vectorized; fixed draw order)
@@ -318,6 +321,59 @@ class EventFlowEngine:
         return starts, ends, p2p_ends, free
 
     # ------------------------------------------------------------------
+    # activity materialization (shared by run() and run_batched lanes)
+    # ------------------------------------------------------------------
+
+    def _materialize(self, dev_times, ar_span, opt_span, off
+                     ) -> List[Activity]:
+        """Build one run's Activity list from its timing accessors.
+
+        ``dev_times(r, d)`` -> (starts, ends, p2p_ends) sequences
+        aligned with device ``d``'s task list (p2p entries are read
+        only for tasks that have a boundary send); ``ar_span(d)`` ->
+        (start, end) of the gradient sync (read only when syncing);
+        ``opt_span(r, d)`` -> (t0, t1); ``off[r, d, j]`` clock
+        offsets. Sequential and batched runs feed the same builder, so
+        activity labeling can never diverge between the two paths.
+        """
+        acts: List[Activity] = []
+        add = acts.append
+        pp, dp, mp = self.strat.pp, self.strat.dp, self.strat.mp
+        for r in range(dp):
+            for d in range(pp):
+                names = self.task_name[d]
+                p2p_names = self.task_p2p_name[d]
+                isf = self.task_isf[d]
+                pos_l = self.task_pos[d]
+                mic_l = self.task_micro[d]
+                st_l, en_l, pe_l = dev_times(r, d)
+                base = (r * pp + d) * mp
+                for j in range(mp):
+                    o = off[r, d, j]
+                    dev = base + j
+                    for i in range(len(names)):
+                        s, e = st_l[i], en_l[i]
+                        add(Activity(device=dev, name=names[i],
+                                     kind="F" if isf[i] else "B",
+                                     start=s + o, end=e + o,
+                                     stage=pos_l[i], micro=mic_l[i]))
+                        if p2p_names[i] is not None:
+                            add(Activity(device=dev, name=p2p_names[i],
+                                         kind="P2P", start=e + o,
+                                         end=pe_l[i] + o, stage=pos_l[i],
+                                         micro=mic_l[i]))
+                    if self.sync:
+                        a0, a1 = ar_span(d)
+                        add(Activity(device=dev, name=f"AR:d{d}",
+                                     kind="AR", start=a0 + o, end=a1 + o,
+                                     stage=d))
+                    t0, t1 = opt_span(r, d)
+                    add(Activity(device=dev, name=f"OPT:d{d}",
+                                 kind="OPT", start=t0 + o, end=t1 + o,
+                                 stage=d))
+        return acts
+
+    # ------------------------------------------------------------------
     # full run
     # ------------------------------------------------------------------
 
@@ -394,42 +450,230 @@ class EventFlowEngine:
                         batch_time = end_j
 
         def materialize() -> List[Activity]:
-            acts: List[Activity] = []
-            add = acts.append
-            for r in range(dp):
+            def dev_times(r, d):
                 starts, ends, p2p_ends, _ = reps[r % n_sim]
-                for d in range(pp):
-                    names = self.task_name[d]
-                    p2p_names = self.task_p2p_name[d]
-                    isf = self.task_isf[d]
-                    pos_l = self.task_pos[d]
-                    mic_l = self.task_micro[d]
-                    st_l, en_l, pe_l = starts[d], ends[d], p2p_ends[d]
-                    base = (r * pp + d) * mp
-                    for j in range(mp):
-                        o = off[r, d, j]
-                        dev = base + j
-                        for i in range(len(names)):
-                            s, e = st_l[i], en_l[i]
-                            add(Activity(device=dev, name=names[i],
-                                         kind="F" if isf[i] else "B",
-                                         start=s + o, end=e + o,
-                                         stage=pos_l[i], micro=mic_l[i]))
-                            pe = pe_l[i]
-                            if pe is not None:
-                                add(Activity(device=dev, name=p2p_names[i],
-                                             kind="P2P", start=e + o,
-                                             end=pe + o, stage=pos_l[i],
-                                             micro=mic_l[i]))
-                        if self.sync:
-                            add(Activity(device=dev, name=f"AR:d{d}",
-                                         kind="AR", start=ar_start[d] + o,
-                                         end=ar_end[d] + o, stage=d))
-                        t0, t1 = opt_span[r][d]
-                        add(Activity(device=dev, name=f"OPT:d{d}",
-                                     kind="OPT", start=t0 + o, end=t1 + o,
-                                     stage=d))
-            return acts
+                return starts[d], ends[d], p2p_ends[d]
+            return self._materialize(
+                dev_times, lambda d: (ar_start[d], ar_end[d]),
+                lambda r, d: opt_span[r][d], off)
 
         return LazyTimeline(n_devices=dp * pp * mp, builder=materialize,
                             batch_time=batch_time, busy=busy)
+
+    # ------------------------------------------------------------------
+    # batched multi-seed replay (one dependency pass, all seeds at once)
+    # ------------------------------------------------------------------
+
+    def _topo_order(self) -> List[Tuple[int, int]]:
+        """One duration-free dependency-resolution pass.
+
+        The task dependency DAG (device serialization + boundary
+        arrivals) does not depend on event durations, so a single
+        topological order of ``(device, task_index)`` is valid for
+        EVERY seed and replica: the ready-queue's enabling conditions
+        are replayed with known/unknown flags instead of times, and the
+        pop order is recorded. ``run_batched`` then evaluates the
+        timing recurrences along this order with all lanes stacked.
+        """
+        if self._topo is not None:
+            return self._topo
+        pp, n_pos, m = self.strat.pp, self.n_pos, self.m
+        f_known = [[False] * m for _ in range(n_pos)]
+        af_known = [[False] * m for _ in range(n_pos)]
+        ab_known = [[False] * m for _ in range(n_pos)]
+        ptr = [0] * pp
+        n_tasks = [len(t) for t in self.task_isf]
+        order: List[Tuple[int, int]] = []
+        queue: deque = deque()
+        enabled = [False] * pp
+
+        def try_enable(d: int) -> None:
+            if enabled[d] or ptr[d] >= n_tasks[d]:
+                return
+            i = ptr[d]
+            pos, mic = self.task_pos[d][i], self.task_micro[d][i]
+            if self.task_isf[d][i]:
+                ok = pos == 0 or af_known[pos][mic]
+            else:
+                ok = f_known[pos][mic] and (pos == n_pos - 1
+                                            or ab_known[pos][mic])
+            if ok:
+                enabled[d] = True
+                queue.append(d)
+
+        for d in range(pp):
+            try_enable(d)
+        while queue:
+            d = queue.popleft()
+            enabled[d] = False
+            i = ptr[d]
+            pos, mic = self.task_pos[d][i], self.task_micro[d][i]
+            if self.task_isf[d][i]:
+                f_known[pos][mic] = True
+                if pos < n_pos - 1:
+                    af_known[pos + 1][mic] = True
+                    try_enable((pos + 1) % pp)
+            else:
+                if pos > 0:
+                    ab_known[pos - 1][mic] = True
+                    try_enable((pos - 1) % pp)
+            order.append((d, i))
+            ptr[d] += 1
+            try_enable(d)
+
+        if len(order) != self.total_tasks:
+            raise RuntimeError(
+                f"pipeline schedule deadlock: {self.strat.label()} "
+                f"{self.strat.schedule} done={len(order)}/"
+                f"{self.total_tasks}")
+        self._topo = order
+        return order
+
+    def run_batched(self, seeds: Optional[Sequence[Optional[int]]] = None,
+                    jitter_sigma: float = 0.0,
+                    straggler_sigma: float = 0.0,
+                    clock_sigma: float = 0.0) -> TimelineBatch:
+        """All S seeds' replays in one pass, bit-identical per seed to
+        sequential ``run(seed=s)`` calls.
+
+        Per-seed noise is drawn exactly as ``run`` draws it (one
+        RandomState per seed, same consumption order), stacked, and the
+        scheduling recurrences are evaluated ONCE along the shared
+        :meth:`_topo_order` with every (seed × replica) lane as a NumPy
+        vector — the Python dependency walk no longer scales with S or
+        dp. ``seeds=None`` is the predict lane (S=1, zero noise).
+        Returns a :class:`TimelineBatch`; no ``Activity`` objects are
+        built.
+        """
+        strat = self.strat
+        pp, dp, mp = strat.pp, strat.dp, strat.mp
+        m, n_pos = self.m, self.n_pos
+        lane_seeds: List[Optional[int]] = ([None] if seeds is None
+                                           else list(seeds))
+        if not lane_seeds:
+            raise ValueError("run_batched needs at least one seed")
+        S = len(lane_seeds)
+        noisy = (jitter_sigma > 0 or straggler_sigma > 0
+                 or clock_sigma > 0)
+
+        samples = []
+        any_rng = False
+        for s in lane_seeds:
+            rng = (np.random.RandomState(s)
+                   if s is not None and noisy else None)
+            any_rng = any_rng or rng is not None
+            samples.append(self._sample(dp, rng, jitter_sigma,
+                                        straggler_sigma, clock_sigma))
+        # A zero-noise lane has identical replicas, so simulating dp of
+        # them (when other lanes are noisy) reproduces run()'s analytic
+        # replication bit-for-bit.
+        n_sim = dp if any_rng else 1
+        R = S * n_sim
+
+        def lanes(k: int) -> np.ndarray:
+            """samples[:][k] stacked and flattened to (R, ...)."""
+            a = np.stack([smp[k] for smp in samples])
+            return (a.reshape((R,) + a.shape[2:]) if n_sim == dp
+                    else a[:, 0])
+
+        durf_l, durb_l = lanes(1), lanes(2)         # (R, n_pos, m)
+        p2pf_l, p2pb_l = lanes(3), lanes(4)
+        ar = np.stack([smp[5] for smp in samples])  # (S, dp, pp)
+        opt = np.stack([smp[6] for smp in samples])
+        off = np.stack([smp[7] for smp in samples])  # (S, dp, pp, mp)
+
+        # ---- vectorized recurrence evaluation along the topo order ----
+        n_tasks = [len(t) for t in self.task_isf]
+        f_end = np.zeros((R, n_pos, m))
+        arr_f = np.zeros((R, n_pos, m))
+        arr_b = np.zeros((R, n_pos, m))
+        free = np.zeros((R, pp))
+        starts = [np.zeros((R, n)) for n in n_tasks]
+        ends = [np.zeros((R, n)) for n in n_tasks]
+        p2p_end = [np.zeros((R, n)) for n in n_tasks]
+        busy_pipe = np.zeros((R, pp))
+        last_pipe = np.zeros((R, pp))
+
+        for d, i in self._topo_order():
+            pos, mic = self.task_pos[d][i], self.task_micro[d][i]
+            fr = free[:, d]                # view — read-only until below
+            if self.task_isf[d][i]:
+                start = (fr if pos == 0
+                         else np.maximum(fr, arr_f[:, pos, mic]))
+                end = start + durf_l[:, pos, mic]
+                f_end[:, pos, mic] = end
+                if pos < n_pos - 1:
+                    arr = end + p2pf_l[:, pos, mic]
+                    arr_f[:, pos + 1, mic] = arr
+                    p2p_end[d][:, i] = arr
+                    last_pipe[:, d] = np.maximum(last_pipe[:, d], arr)
+            else:
+                ready = f_end[:, pos, mic]
+                if pos < n_pos - 1:
+                    ready = np.maximum(ready, arr_b[:, pos, mic])
+                start = np.maximum(fr, ready)
+                end = start + durb_l[:, pos, mic]
+                if pos > 0:
+                    arr = end + p2pb_l[:, pos - 1, mic]
+                    arr_b[:, pos - 1, mic] = arr
+                    p2p_end[d][:, i] = arr
+                    last_pipe[:, d] = np.maximum(last_pipe[:, d], arr)
+            starts[d][:, i] = start
+            ends[d][:, i] = end
+            busy_pipe[:, d] += end - start  # before free[:, d] aliases start
+            free[:, d] = end
+            last_pipe[:, d] = np.maximum(last_pipe[:, d], end)
+
+        # ---- DP level (same fold order as run(), vectorized over S) ----
+        def expand(a: np.ndarray) -> np.ndarray:
+            """(S, n_sim, pp) -> (S, dp, pp) replica view (r % n_sim)."""
+            a = a.reshape(S, n_sim, pp)
+            return a if n_sim == dp else np.broadcast_to(a, (S, dp, pp))
+
+        free_e = expand(free)
+        busy_e = expand(busy_pipe)
+        last_e = expand(last_pipe)
+
+        ar_start = np.zeros((S, pp))
+        ar_end = np.zeros((S, pp))
+        if self.sync:
+            ar_start = free_e.max(axis=1)
+            ar_end = ar_start + ar.max(axis=1)
+            opt_t0 = np.broadcast_to(ar_end[:, None, :], (S, dp, pp))
+        else:
+            opt_t0 = free_e
+        opt_t1 = opt_t0 + opt
+
+        busy_full = busy_e
+        if self.sync:
+            busy_full = busy_full + (ar_end - ar_start)[:, None, :]
+        busy_full = busy_full + (opt_t1 - opt_t0)
+        busy_dev = np.broadcast_to(
+            busy_full[:, :, :, None], (S, dp, pp, mp)).reshape(S, -1)
+
+        last = np.maximum(last_e, opt_t1)                # (S, dp, pp)
+        end_j = last[:, :, :, None] + off                # (S, dp, pp, mp)
+        batch_times = np.maximum(end_j.max(axis=(1, 2, 3)), 0.0)
+
+        starts_r = [a.reshape(S, n_sim, -1) for a in starts]
+        ends_r = [a.reshape(S, n_sim, -1) for a in ends]
+        p2p_r = [a.reshape(S, n_sim, -1) for a in p2p_end]
+
+        def lane_builder(lane: int):
+            def materialize() -> List[Activity]:
+                def dev_times(r, d):
+                    rr = r % n_sim
+                    return (starts_r[d][lane, rr], ends_r[d][lane, rr],
+                            p2p_r[d][lane, rr])
+                return self._materialize(
+                    dev_times,
+                    lambda d: (ar_start[lane, d], ar_end[lane, d]),
+                    lambda r, d: (opt_t0[lane, r, d], opt_t1[lane, r, d]),
+                    off[lane])
+            return materialize
+
+        return TimelineBatch(
+            seeds=lane_seeds, n_devices=dp * pp * mp, dp=dp, pp=pp, mp=mp,
+            n_sim=n_sim, batch_times=batch_times, busy=busy_dev,
+            starts=starts_r, ends=ends_r, offsets=off,
+            lane_builder=lane_builder)

@@ -22,7 +22,7 @@ from repro.core.events import (Stage, Strategy, build_stage_events,
 from repro.core.hierarchy import build_positions
 from repro.core.profiler import (AnalyticalProvider, Provider,
                                  profile_events, profiling_cost)
-from repro.core.timeline import Timeline
+from repro.core.timeline import Timeline, TimelineBatch
 
 
 @dataclasses.dataclass
@@ -66,21 +66,53 @@ class DistSim:
                                         clock_sigma=clock_sigma, seed=seed)
         return self._result(tl)
 
+    # ---- batched array-native paths (repro.validate hot loop) ----
+    def predict_batched(self, positions: Optional[List[Stage]] = None
+                        ) -> TimelineBatch:
+        """The zero-noise prediction as a single-lane TimelineBatch —
+        same numbers as ``predict()``, but with the per-task arrays the
+        array-native validation metrics consume directly."""
+        return self.engine(positions).run_batched(None)
+
+    def replay_batched(self, seeds, jitter_sigma: float = 0.025,
+                       straggler_sigma: float = 0.0,
+                       clock_sigma: float = 0.0,
+                       positions: Optional[List[Stage]] = None
+                       ) -> TimelineBatch:
+        """All seeds' replay oracles in one vectorized pass —
+        bit-identical per seed to sequential ``replay(seed=s)`` calls
+        (asserted in ``tests/test_engine.py``), without materializing a
+        single ``Activity``."""
+        return self.engine(positions).run_batched(
+            seeds, jitter_sigma=jitter_sigma,
+            straggler_sigma=straggler_sigma, clock_sigma=clock_sigma)
+
     # ---- conformance hook (repro.validate) ----
     def predict_and_replay(self, seeds=(0,), jitter_sigma: float = 0.025,
                            straggler_sigma: float = 0.0,
-                           clock_sigma: float = 0.0):
+                           clock_sigma: float = 0.0, batched: bool = True):
         """One prediction plus a replay per seed, all sharing a single
         event-flow engine (one positions build, one event profile) —
         the per-cell unit of the accuracy sweep.
+
+        With ``batched=True`` (the default) the replays come from one
+        ``run_batched`` pass and the returned ``SimResult`` timelines
+        are lazy per-lane views; ``batched=False`` keeps the sequential
+        one-``run()``-per-seed oracle (the differential baseline).
         Returns ``(pred, [replay_0, ...])``."""
         engine = self.engine()
         pred = self._result(engine.run())
-        replays = [self._result(engine.run(jitter_sigma=jitter_sigma,
-                                           straggler_sigma=straggler_sigma,
-                                           clock_sigma=clock_sigma,
-                                           seed=s))
-                   for s in seeds]
+        if batched:
+            batch = engine.run_batched(seeds, jitter_sigma=jitter_sigma,
+                                       straggler_sigma=straggler_sigma,
+                                       clock_sigma=clock_sigma)
+            replays = [self._result(batch.timeline(i))
+                       for i in range(len(batch))]
+        else:
+            replays = [self._result(engine.run(
+                jitter_sigma=jitter_sigma,
+                straggler_sigma=straggler_sigma,
+                clock_sigma=clock_sigma, seed=s)) for s in seeds]
         return pred, replays
 
     # ---- search-engine hooks ----

@@ -8,7 +8,9 @@ per-stage timestamp error).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,10 +90,17 @@ class LazyTimeline(Timeline):
     until something actually iterates the activities (per-activity
     error metrics, trace export). ``DistSim.predict()`` on a
     4096-device strategy never pays it.
+
+    ``LazyTimeline.materializations`` counts every deferred build that
+    actually ran, process-wide — the validate sweep's zero-
+    materialization acceptance test reads it before/after a sweep.
     """
 
+    #: process-wide count of deferred Activity-list builds that ran
+    materializations: int = 0
+
     def __init__(self, n_devices: int, builder, batch_time: float,
-                 busy: List[float]):
+                 busy: Sequence[float]):
         # deliberately does NOT call the dataclass __init__: the
         # ``activities`` field is served by the property below.
         self.n_devices = n_devices
@@ -103,6 +112,7 @@ class LazyTimeline(Timeline):
     @property
     def activities(self) -> List[Activity]:
         if self._acts is None:
+            LazyTimeline.materializations += 1
             self._acts = self._builder()
             self._builder = None       # release the engine state it closed over
         return self._acts
@@ -124,6 +134,70 @@ class LazyTimeline(Timeline):
         if util is None:
             util = self.utilization()
         return 1.0 - sum(util.values()) / max(1, len(util))
+
+
+class TimelineBatch:
+    """S replay runs of one engine as stacked ``(S, ...)`` arrays.
+
+    Produced by ``EventFlowEngine.run_batched``: all seeds share a
+    single dependency-resolution pass, and everything the validate
+    sweep needs — per-seed batch time, per-device busy seconds, and
+    the per-task compute start/end arrays that back the array-native
+    error metrics — lives here as NumPy arrays. No ``Activity`` object
+    is ever built unless :meth:`timeline` is called for one lane
+    (trace export / debugging), which returns an ordinary
+    :class:`LazyTimeline`.
+
+    Array layout (``pp`` pipeline devices, ``dp`` replicas, ``mp``
+    model-parallel ranks; ``n_sim`` is ``dp`` for noisy replays and 1
+    when all replicas are provably identical):
+
+    * ``starts[d]`` / ``ends[d]``: ``(S, n_sim, n_tasks_d)`` compute
+      (F/B) task times for pipeline device ``d``, in schedule order,
+      WITHOUT clock offsets (offsets are per mp rank);
+    * ``offsets``: ``(S, dp, pp, mp)`` clock-skew constants;
+    * ``busy``: ``(S, n_devices)`` busy seconds per full device
+      (device index ``(r*pp + d)*mp + j``);
+    * ``batch_times``: ``(S,)``.
+    """
+
+    def __init__(self, seeds: Sequence[Optional[int]], n_devices: int,
+                 dp: int, pp: int, mp: int, n_sim: int,
+                 batch_times: np.ndarray, busy: np.ndarray,
+                 starts: List[np.ndarray], ends: List[np.ndarray],
+                 offsets: np.ndarray,
+                 lane_builder: Callable[[int], Callable[[], List[Activity]]]):
+        self.seeds = list(seeds)
+        self.n_devices = n_devices
+        self.dp, self.pp, self.mp = dp, pp, mp
+        self.n_sim = n_sim
+        self.batch_times = batch_times
+        self.busy = busy
+        self.starts = starts
+        self.ends = ends
+        self.offsets = offsets
+        self._lane_builder = lane_builder
+
+    def __len__(self) -> int:
+        return len(self.seeds)
+
+    def timeline(self, i: int) -> LazyTimeline:
+        """Lane ``i`` as a LazyTimeline (activities still deferred)."""
+        return LazyTimeline(n_devices=self.n_devices,
+                            builder=self._lane_builder(i),
+                            batch_time=float(self.batch_times[i]),
+                            busy=self.busy[i])
+
+    def utilization(self) -> np.ndarray:
+        """(S, n_devices) busy fraction; 0 where batch_time is 0
+        (mirrors ``Timeline.utilization`` on empty timelines)."""
+        bt = self.batch_times[:, None]
+        return np.divide(self.busy, bt, out=np.zeros_like(self.busy),
+                         where=bt > 0)
+
+    def bubble_fraction(self) -> np.ndarray:
+        """(S,) idle fraction averaged over devices."""
+        return 1.0 - self.utilization().mean(axis=1)
 
 
 # --------------------------------------------------------------------------

@@ -14,7 +14,8 @@ error, <5% per-device activity error, paper §5):
 ``tests/test_validation.py`` is the tier-1 gate with goldens under
 ``tests/goldens/``.
 """
-from repro.validate.metrics import CellMetrics, aggregate, compare_timelines
+from repro.validate.metrics import (CellMetrics, aggregate, compare_batch,
+                                    compare_timelines)
 from repro.validate.report import (dump, dumps, format_validation_report,
                                    load, load_path, save)
 from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
@@ -22,7 +23,7 @@ from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
                                   run_sweep, smoke_matrix)
 
 __all__ = [
-    "CellMetrics", "aggregate", "compare_timelines",
+    "CellMetrics", "aggregate", "compare_batch", "compare_timelines",
     "dump", "dumps", "format_validation_report", "load", "load_path",
     "save", "CellResult", "SweepResult", "Thresholds", "ValidationCell",
     "full_matrix", "run_cell", "run_sweep", "smoke_matrix",

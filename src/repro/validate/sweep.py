@@ -22,7 +22,8 @@ from repro.core.events import Strategy
 from repro.core.profiler import AnalyticalProvider, Provider
 from repro.core.serde import dataclass_from_dict
 from repro.core.simulator import DistSim
-from repro.validate.metrics import CellMetrics, aggregate, compare_timelines
+from repro.validate.metrics import (CellMetrics, aggregate, compare_batch,
+                                    compare_timelines)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,19 +184,37 @@ def full_matrix() -> List[ValidationCell]:
 def run_cell(cell: ValidationCell, provider: Provider,
              seeds: Sequence[int] = (0, 1, 2),
              thresholds: Optional[Thresholds] = None,
-             jitter_sigma: float = 0.025) -> CellResult:
+             jitter_sigma: float = 0.025, batched: bool = True
+             ) -> CellResult:
+    """One sweep point: one engine build, one batched replay over all
+    seeds, array-native metrics (no ``Activity`` materialization).
+
+    ``batched=False`` keeps the historical path — S sequential
+    ``replay()`` calls compared via materialized activity lists — as
+    the differential baseline for ``tests/test_validation.py`` and the
+    seed-scaling section of ``benchmarks/bench_timeline.py``.
+    """
     thresholds = thresholds or Thresholds()
     sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
                   cell.seq, provider)
-    pred, replays = sim.predict_and_replay(seeds=seeds,
-                                           jitter_sigma=jitter_sigma)
-    per_seed = [compare_timelines(pred.timeline, r.timeline)
-                for r in replays]
+    if batched:
+        pred_b = sim.predict_batched()
+        rep_b = sim.replay_batched(seeds, jitter_sigma=jitter_sigma)
+        per_seed = compare_batch(pred_b, rep_b)
+        pred_bt = float(pred_b.batch_times[0])
+        replay_bts = [float(t) for t in rep_b.batch_times]
+    else:
+        pred, replays = sim.predict_and_replay(
+            seeds=seeds, jitter_sigma=jitter_sigma, batched=False)
+        per_seed = [compare_timelines(pred.timeline, r.timeline)
+                    for r in replays]
+        pred_bt = pred.batch_time
+        replay_bts = [r.batch_time for r in replays]
     metrics = aggregate(per_seed)
     return CellResult(
         cell=cell, metrics=metrics, per_seed=per_seed, seeds=list(seeds),
-        pred_batch_time=pred.batch_time,
-        replay_batch_times=[r.batch_time for r in replays],
+        pred_batch_time=pred_bt,
+        replay_batch_times=replay_bts,
         violations=thresholds.violations(metrics))
 
 
@@ -204,14 +223,16 @@ def run_sweep(cells: Optional[Sequence[ValidationCell]] = None,
               seeds: Sequence[int] = (0, 1, 2),
               thresholds: Optional[Thresholds] = None,
               jitter_sigma: float = 0.025,
-              provider: Optional[Provider] = None) -> SweepResult:
+              provider: Optional[Provider] = None,
+              batched: bool = True) -> SweepResult:
     """Run the matrix; one shared provider = one event profile cache."""
     if isinstance(cluster, str):
         cluster = get_cluster(cluster)
     cells = list(cells) if cells is not None else smoke_matrix()
     thresholds = thresholds or Thresholds()
     provider = provider or AnalyticalProvider(cluster)
-    results = [run_cell(c, provider, seeds, thresholds, jitter_sigma)
+    results = [run_cell(c, provider, seeds, thresholds, jitter_sigma,
+                        batched=batched)
                for c in cells]
     return SweepResult(cells=results, thresholds=thresholds,
                        cluster=provider.cluster.name, seeds=list(seeds),

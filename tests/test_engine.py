@@ -224,6 +224,111 @@ def test_engine_cache_custom_positions_do_not_shadow_default():
 
 
 # --------------------------------------------------------------------------
+# batched multi-seed replay: differential oracle (batched == looped)
+# --------------------------------------------------------------------------
+
+BATCH_CASES = [
+    ("gpt2_345m", Strategy(mp=1, pp=2, dp=2, microbatches=4), 1),
+    ("gpt2_345m", Strategy(mp=1, pp=2, dp=2, microbatches=4), 2),
+    ("gpt2_345m", Strategy(mp=1, pp=4, dp=1, microbatches=8,
+                           schedule="gpipe"), 2),
+    ("gpt2_345m", Strategy(mp=2, pp=2, dp=1, microbatches=4,
+                           schedule="interleaved", vpp=2), 4),
+    ("gpt2_345m", Strategy(mp=1, pp=2, dp=2, microbatches=4,
+                           schedule="pipedream"), 2),
+    ("gpt2_345m", Strategy(mp=2, pp=2, dp=2, microbatches=4,
+                           zero1=True), 2),
+    ("bert_large", Strategy(mp=2, pp=2, dp=2, microbatches=4), 2),
+    ("t5_large", Strategy(mp=1, pp=2, dp=2, microbatches=4), 4),
+]
+
+
+@pytest.mark.parametrize(
+    "arch,strat,S", BATCH_CASES,
+    ids=lambda v: v if isinstance(v, str) else (
+        f"{v.label()}-{v.schedule}" if isinstance(v, Strategy) else f"S{v}"))
+def test_batched_replay_bit_identical_to_looped(arch, strat, S):
+    """run_batched(seeds) must be bit-identical PER SEED to sequential
+    run(seed=s) calls — batch times, per-device busy seconds, and every
+    materialized activity timestamp. This is the oracle that lets the
+    validate sweep switch to the batched path without regenerating
+    goldens."""
+    gb = strat.dp * strat.microbatches * 2
+    sim = DistSim(get_config(arch), strat, gb, 128, PROVIDER)
+    engine = sim.engine()
+    seeds = list(range(S))
+    batch = engine.run_batched(seeds, jitter_sigma=0.025,
+                               straggler_sigma=0.05, clock_sigma=1e-4)
+    assert len(batch) == S
+    assert batch.seeds == seeds
+    for i, s in enumerate(seeds):
+        tl = engine.run(jitter_sigma=0.025, straggler_sigma=0.05,
+                        clock_sigma=1e-4, seed=s)
+        assert float(batch.batch_times[i]) == tl.batch_time
+        assert batch.n_devices == tl.n_devices
+        for d in range(tl.n_devices):
+            assert float(batch.busy[i][d]) == tl._busy[d]
+        assert _key(batch.timeline(i)) == _key(tl)
+
+
+def test_batched_predict_lane_matches_predict():
+    """seeds=None is the zero-noise predict lane — same numbers as
+    run(), down to the bit."""
+    sim = _sim(dp=3, mp=2)
+    engine = sim.engine()
+    batch = engine.run_batched(None)
+    tl = engine.run()
+    assert batch.seeds == [None] and batch.n_sim == 1
+    assert float(batch.batch_times[0]) == tl.batch_time
+    assert _key(batch.timeline(0)) == _key(tl)
+
+
+def test_batched_zero_noise_seed_equals_predict():
+    """A seeded lane with all sigmas 0 is still the deterministic
+    predict path (run() ignores the seed without noise; so must the
+    batch)."""
+    sim = _sim()
+    engine = sim.engine()
+    batch = engine.run_batched([5], jitter_sigma=0.0)
+    assert _key(batch.timeline(0)) == _key(engine.run())
+
+
+def test_batched_single_lane_matches_polling_reference():
+    """S=1 batched replay at zero noise must reproduce the frozen seed
+    scheduler bit-for-bit on a small cell (under noise the engine
+    intentionally diverges: it fixes the polling oracle's per-activity
+    clock draws and non-synchronizing all-reduce)."""
+    cfg = smoke_config(get_config("gpt2_345m"))
+    strat = Strategy(mp=1, pp=2, dp=2, microbatches=4)
+    sim = DistSim(cfg, strat, 8, 64, PROVIDER)
+    batch = sim.engine().run_batched([0], jitter_sigma=0.0)
+    old = construct_timeline_polling(cfg, strat, 8, 64, PROVIDER)
+    assert batch.n_devices == old.n_devices
+    assert _key(batch.timeline(0)) == _key(old)
+
+
+def test_batched_stats_match_lane_timelines():
+    """TimelineBatch utilization/bubble arrays must agree with the
+    per-lane LazyTimeline views (which in turn match materialized
+    recomputation, covered above)."""
+    sim = _sim(dp=2)
+    batch = sim.replay_batched((0, 1), clock_sigma=1e-4)
+    util = batch.utilization()
+    bub = batch.bubble_fraction()
+    for i in range(len(batch)):
+        lane = batch.timeline(i)
+        lane_util = lane.utilization()
+        for d in range(batch.n_devices):
+            assert util[i, d] == lane_util[d]
+        assert bub[i] == pytest.approx(lane.bubble_fraction(), abs=1e-12)
+
+
+def test_batched_empty_seedlist_raises():
+    with pytest.raises(ValueError, match="seed"):
+        _sim().engine().run_batched([])
+
+
+# --------------------------------------------------------------------------
 # failure modes
 # --------------------------------------------------------------------------
 
@@ -241,6 +346,8 @@ def test_deadlocked_schedule_raises():
     engine.task_p2p_name[1] = engine.task_p2p_name[1][::-1]
     with pytest.raises(RuntimeError, match="deadlock"):
         engine.run()
+    with pytest.raises(RuntimeError, match="deadlock"):
+        engine.run_batched([0, 1], jitter_sigma=0.025)
 
 
 def test_nan_free_timelines():

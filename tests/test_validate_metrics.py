@@ -1,0 +1,132 @@
+"""Differential/property harness for the array-native validation
+metrics: ``compare_batch`` must agree with a naive recompute from
+materialized ``Activity`` lists, and ``aggregate`` must satisfy its
+algebraic invariants. Hypothesis-based; auto-skips without the
+``[test]`` extra (same pattern as the schedule property tests)."""
+import dataclasses
+
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.configs.base import get_config
+from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim, Strategy
+from repro.validate import (CellMetrics, aggregate, compare_batch,
+                            compare_timelines)
+
+PROVIDER = AnalyticalProvider(A40_CLUSTER)
+FIELDS = [f.name for f in dataclasses.fields(CellMetrics)]
+
+finite = st.floats(min_value=0.0, max_value=10.0, allow_nan=False)
+metrics_st = st.builds(CellMetrics, **{f: finite for f in FIELDS})
+
+
+# --------------------------------------------------------------------------
+# aggregate() invariants
+# --------------------------------------------------------------------------
+
+@hp.given(m=metrics_st)
+@hp.settings(max_examples=50, deadline=None)
+def test_aggregate_singleton_is_identity(m):
+    """aggregate([m]) == m exactly (mean of one, max of one)."""
+    assert aggregate([m]) == m
+
+
+@hp.given(ms=st.lists(metrics_st, min_size=1, max_size=6), data=st.data())
+@hp.settings(max_examples=50, deadline=None)
+def test_aggregate_permutation_invariant(ms, data):
+    """Seed order must not matter (field-wise means re-associate, so
+    equality is up to float tolerance; worst_* is an exact max)."""
+    perm = data.draw(st.permutations(ms))
+    a, b = aggregate(ms), aggregate(perm)
+    assert a.worst_batch_time_error == b.worst_batch_time_error
+    for f in FIELDS:
+        assert getattr(a, f) == pytest.approx(getattr(b, f),
+                                              rel=1e-9, abs=1e-12)
+
+
+@hp.given(ms=st.lists(metrics_st, min_size=1, max_size=6))
+@hp.settings(max_examples=50, deadline=None)
+def test_aggregate_mean_within_extremes_and_worst_is_max(ms):
+    agg = aggregate(ms)
+    eps = 1e-9
+    for f in FIELDS:
+        vals = [getattr(m, f) for m in ms]
+        assert min(vals) - eps <= getattr(agg, f) <= max(vals) + eps
+    assert agg.worst_batch_time_error == max(m.worst_batch_time_error
+                                             for m in ms)
+
+
+def test_aggregate_empty_is_zero_metrics():
+    assert aggregate([]) == CellMetrics()
+
+
+# --------------------------------------------------------------------------
+# array-native compare_batch vs naive materializing recompute
+# --------------------------------------------------------------------------
+
+DIFF_CELLS = [
+    ("gpt2_345m", Strategy(mp=1, pp=2, dp=2, microbatches=4)),
+    ("gpt2_345m", Strategy(mp=2, pp=2, dp=1, microbatches=4,
+                           schedule="interleaved", vpp=2)),
+    ("gpt2_345m", Strategy(mp=1, pp=2, dp=2, microbatches=4,
+                           schedule="pipedream")),
+    ("t5_large", Strategy(mp=1, pp=4, dp=1, microbatches=8,
+                          schedule="gpipe")),
+]
+
+
+def _batches(arch, strat, seeds=(0, 1, 2), **noise):
+    sim = DistSim(get_config(arch), strat,
+                  strat.dp * strat.microbatches * 2, 128, PROVIDER)
+    noise.setdefault("jitter_sigma", 0.025)
+    return (sim, sim.predict_batched(),
+            sim.replay_batched(seeds, **noise))
+
+
+@pytest.mark.parametrize("arch,strat", DIFF_CELLS,
+                         ids=lambda v: v if isinstance(v, str)
+                         else f"{v.label()}-{v.schedule}")
+def test_array_native_equals_naive_recompute(arch, strat):
+    """The whole point of the harness: every CellMetrics field computed
+    from the batch arrays must equal the naive path that materializes
+    both Activity lists and matches (device, name) pairs."""
+    sim, pred_b, rep_b = _batches(arch, strat, clock_sigma=1e-4)
+    arr = compare_batch(pred_b, rep_b)
+    pred_tl = sim.predict().timeline
+    assert len(arr) == len(rep_b)
+    for i in range(len(rep_b)):
+        naive = compare_timelines(pred_tl, rep_b.timeline(i))
+        for f in FIELDS:
+            assert getattr(arr[i], f) == pytest.approx(
+                getattr(naive, f), rel=1e-9, abs=1e-12), (f, i)
+
+
+def test_compare_batch_rejects_noisy_or_multilane_pred():
+    """A noisy (or multi-lane) prediction batch would silently be
+    misread as replica-0 unoffset times — must raise, not mislead."""
+    _, _, rep_b = _batches("gpt2_345m", DIFF_CELLS[0][1])
+    with pytest.raises(ValueError, match="single-lane"):
+        compare_batch(rep_b, rep_b)
+
+
+def test_self_compare_is_exactly_zero():
+    """Pred vs itself: every error is 0.0 EXACTLY — the array path may
+    not introduce even one ulp of self-disagreement."""
+    _, pred_b, _ = _batches("gpt2_345m", DIFF_CELLS[0][1])
+    for m in compare_batch(pred_b, pred_b):
+        assert m == CellMetrics()
+
+
+@hp.given(seed=st.integers(0, 2**31 - 1))
+@hp.settings(max_examples=15, deadline=None)
+def test_batched_metrics_deterministic_and_seed_keyed(seed):
+    """Same seed → identical metrics across fresh batches; the metric
+    numbers depend only on the seed list, not on batch composition."""
+    strat = DIFF_CELLS[0][1]
+    _, pred_b, rep_a = _batches("gpt2_345m", strat, seeds=(seed,))
+    _, pred_b2, rep_b = _batches("gpt2_345m", strat, seeds=(seed, seed))
+    (ma,) = compare_batch(pred_b, rep_a)
+    mb = compare_batch(pred_b2, rep_b)
+    assert ma == mb[0] == mb[1]

@@ -86,6 +86,51 @@ def test_goldens_match(sweep):
                 (label, f.name)
 
 
+def test_goldens_stable_under_batched_replay(sweep):
+    """The batching refactor must need NO golden regeneration: batched
+    replay with the golden seeds reproduces the committed per-cell
+    batch times EXACTLY (replay is bit-identical to the sequential
+    path the goldens were generated with — any drift here is a
+    batching bug, not a model change)."""
+    golden = load_path(GOLDEN)
+    assert golden.seeds == list(SEEDS) == sweep.seeds
+    for g, c in zip(golden.cells, sweep.cells):
+        assert g.cell == c.cell
+        assert c.pred_batch_time == g.pred_batch_time
+        assert c.replay_batch_times == g.replay_batch_times
+
+
+def test_run_cell_batched_matches_sequential():
+    """Tier-1 differential: the array-native batched cell evaluation
+    must reproduce the legacy sequential path — bit-identical batch
+    times, metrics equal to float tolerance (the reduction tree
+    differs), identical verdicts."""
+    provider = AnalyticalProvider(A40_CLUSTER)
+    for cell in MATRIX[:4]:
+        a = run_cell(cell, provider, seeds=SEEDS, batched=True)
+        b = run_cell(cell, provider, seeds=SEEDS, batched=False)
+        assert a.pred_batch_time == b.pred_batch_time
+        assert a.replay_batch_times == b.replay_batch_times
+        for ma, mb in zip(a.per_seed + [a.metrics],
+                          b.per_seed + [b.metrics]):
+            for f in dataclasses.fields(CellMetrics):
+                assert getattr(ma, f.name) == pytest.approx(
+                    getattr(mb, f.name), rel=1e-9, abs=1e-12), \
+                    (cell.label(), f.name)
+        assert a.violations == b.violations
+
+
+def test_smoke_sweep_materializes_no_activities():
+    """Acceptance: the validate sweep must run with ZERO Activity
+    materialization — batch times, utilization and all §5 metrics come
+    straight from the engine arrays."""
+    from repro.core import LazyTimeline
+    before = LazyTimeline.materializations
+    res = run_sweep(MATRIX, cluster=A40_CLUSTER, seeds=(0, 1))
+    assert res.cells
+    assert LazyTimeline.materializations == before
+
+
 def test_sweep_deterministic():
     """Same cell, fresh providers → bit-identical metrics (no hidden
     cache-order or global-RNG dependence)."""
