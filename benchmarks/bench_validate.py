@@ -2,11 +2,17 @@
 
 Runs predict() vs multi-seed replay() over the accuracy matrix, writes
 ``validation_report.json`` (uploaded as a CI artifact), prints the
-pass/fail table, and exits non-zero if any non-xfail cell exceeds the
-paper's §5 thresholds.
+pass/fail table plus the unique-event / build-cache accounting, and
+exits non-zero if any non-xfail cell exceeds the paper's §5 thresholds.
+
+In smoke mode it additionally gates the sweep-scale subsystem: the
+shared build cache must make a build-dominated cell family >= 3x
+faster to re-sweep than the uncached path, with a bit-identical report
+(same ``dump()`` JSON) — the wall-time claim behind running the
+extended ``--full`` matrix nightly with ``--jobs 4``.
 
     PYTHONPATH=src python benchmarks/bench_validate.py --smoke
-    PYTHONPATH=src python benchmarks/bench_validate.py --full --seeds 0,1,2,3
+    PYTHONPATH=src python benchmarks/bench_validate.py --full --jobs 4
     PYTHONPATH=src python benchmarks/bench_validate.py --update-goldens
 """
 from __future__ import annotations
@@ -17,12 +23,58 @@ import os
 import sys
 import time
 
-from repro.validate import (Thresholds, full_matrix, run_sweep,
-                            smoke_matrix)
-from repro.validate.report import format_validation_report, save
+from repro.core import AnalyticalProvider, get_cluster
+from repro.validate import (BuildCache, Thresholds, full_matrix,
+                            run_sweep, smoke_matrix)
+from repro.validate.report import (dumps, format_validation_report, save)
 
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
                            "goldens", "validation_smoke.json")
+GATE_CACHE_SPEEDUP = 3.0
+
+
+def _best_of(fn, n=3):
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        res = fn()
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, out = dt, res
+    return best, out
+
+
+def cache_gate(cluster: str) -> dict:
+    """Build-cache effectiveness gate on a build-dominated family: the
+    4 gpt_145b predict-scale cells of the full matrix (ONE strategy
+    under the four schedules — the recurrence the cache dedups:
+    gpipe/1f1b/pipedream share a build, interleaved adds its vpp=2
+    one). Warm cached re-sweep must be >= 3x faster than the uncached
+    sweep AND produce a bit-identical report."""
+    cells = [c for c in full_matrix()
+             if c.arch == "gpt_145b" and c.strategy.pp == 8]
+    assert len(cells) == 4, "gate family drifted; fix the filter"
+    seeds = (0, 1, 2)
+
+    t_uncached, ref = _best_of(
+        lambda: run_sweep(cells, cluster=cluster, seeds=seeds,
+                          cache=False))
+    provider = AnalyticalProvider(get_cluster(cluster))
+    cache = BuildCache(provider)
+    run_sweep(cells, provider=provider, seeds=seeds, cache=cache)  # warm
+    t_warm, warm = _best_of(
+        lambda: run_sweep(cells, provider=provider, seeds=seeds,
+                          cache=cache))
+    identical = dumps(ref) == dumps(warm)
+    return {
+        "cells": len(cells),
+        "uncached_s": t_uncached,
+        "warm_cached_s": t_warm,
+        "speedup": t_uncached / t_warm if t_warm else float("inf"),
+        "required_speedup": GATE_CACHE_SPEEDUP,
+        "bit_identical": identical,
+        "cache": cache.snapshot(),
+    }
 
 
 def main() -> None:
@@ -32,12 +84,20 @@ def main() -> None:
                         help="CI matrix (models x schedules x strategies;"
                              " the default)")
     matrix.add_argument("--full", action="store_true",
-                        help="nightly-scale cross product")
+                        help="nightly-scale cross product incl. the "
+                             "predict-scale 52-145B cells")
     ap.add_argument("--seeds", default="0,1,2",
                     help="comma-separated replay seeds")
     ap.add_argument("--cluster", default="a40-cluster")
     ap.add_argument("--jitter", type=float, default=0.025,
                     help="replay per-event jitter sigma")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker processes for the sweep (cells fan out "
+                         "with per-worker provider shards; the merged "
+                         "report is bit-identical to --jobs 1)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the shared build cache (A/B baseline; "
+                         "results are bit-identical either way)")
     ap.add_argument("--batch-time-threshold", type=float, default=None)
     ap.add_argument("--activity-threshold", type=float, default=None)
     ap.add_argument("--out", default="validation_report.json",
@@ -68,16 +128,31 @@ def main() -> None:
     if args.activity_threshold is not None:
         thr = dataclasses.replace(thr, activity=args.activity_threshold)
 
+    provider = AnalyticalProvider(get_cluster(args.cluster))
+    cache = None if args.no_cache else BuildCache(provider)
     t0 = time.perf_counter()
-    result = run_sweep(cells, cluster=args.cluster, seeds=seeds,
+    result = run_sweep(cells, provider=provider, seeds=seeds,
                        thresholds=thr, jitter_sigma=args.jitter,
-                       batched=not args.sequential)
+                       batched=not args.sequential,
+                       cache=cache if cache is not None else False,
+                       jobs=args.jobs)
     wall = time.perf_counter() - t0
 
     print(format_validation_report(result))
+    mode = ("sequential replay" if args.sequential else "batched replay")
     print(f"\nswept {len(result.cells)} cells x {len(seeds)} seeds "
           f"in {wall:.2f}s ({len(result.cells) / wall:.1f} cells/s, "
-          f"{'sequential replay' if args.sequential else 'batched replay'})")
+          f"{mode}, jobs={max(1, args.jobs)}, "
+          f"cache={'off' if args.no_cache else 'on'})")
+    ps = provider.stats
+    print(f"provider: {ps.evaluations} unique events profiled, "
+          f"{ps.hits} reuses ({100 * ps.hit_rate:.1f}% hit rate)")
+    if cache is not None:
+        cs = cache.stats
+        print(f"build cache: positions {cs.positions_hits}h/"
+              f"{cs.positions_misses}m, builds {cs.build_hits}h/"
+              f"{cs.build_misses}m, engines {cs.engine_hits}h/"
+              f"{cs.engine_misses}m")
 
     if args.update_goldens:
         path = os.path.normpath(GOLDEN_PATH)
@@ -88,10 +163,33 @@ def main() -> None:
         save(result, args.out)
         print(f"report written to {args.out}")
 
+    failed = False
     if not result.passed:
         fails = ", ".join(c.cell.label() for c in result.failures)
         print(f"validate/ERROR: thresholds exceeded on {fails}",
               file=sys.stderr)
+        failed = True
+
+    if not args.full and not args.update_goldens:
+        gate = cache_gate(args.cluster)
+        print(f"\ncache gate — {gate['cells']} gpt_145b cells "
+              f"(1 strategy x 4 schedules): "
+              f"uncached {gate['uncached_s'] * 1e3:.1f}ms, "
+              f"warm cached {gate['warm_cached_s'] * 1e3:.1f}ms = "
+              f"{gate['speedup']:.1f}x (gate: "
+              f"{GATE_CACHE_SPEEDUP:.0f}x), bit-identical: "
+              f"{gate['bit_identical']}")
+        if not gate["bit_identical"]:
+            print("validate/ERROR: cached sweep report differs from "
+                  "uncached", file=sys.stderr)
+            failed = True
+        if gate["speedup"] < GATE_CACHE_SPEEDUP:
+            print(f"validate/ERROR: warm-cache speedup "
+                  f"{gate['speedup']:.1f}x < {GATE_CACHE_SPEEDUP}x",
+                  file=sys.stderr)
+            failed = True
+
+    if failed:
         sys.exit(1)
 
 

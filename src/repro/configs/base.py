@@ -132,9 +132,16 @@ _ASSIGNED = (
 _PAPER = ("bert_large", "gpt2_345m", "t5_large", "bert_exlarge", "gpt_145b")
 
 
+_LOADED = False
+
+
 def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
     for mod in _ASSIGNED + _PAPER:
         importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True
 
 
 def get_config(name: str) -> ArchConfig:

@@ -7,13 +7,15 @@ replay oracle, and the strategy-search use-case.
 Public API:
     from repro.core import DistSim, Strategy, grid_search
 """
-from repro.core.events import Strategy, Event, ComposedEvent
-from repro.core.engine import EventFlowEngine
+from repro.core.events import (Strategy, Event, ComposedEvent,
+                               stage_signature)
+from repro.core.engine import EngineBuild, EventFlowEngine
 from repro.core.simulator import DistSim, SimResult
 from repro.core.search import grid_search, SearchEntry
 from repro.core.costmodel import (ClusterSpec, CLUSTERS, V5E_POD,
                                   A40_CLUSTER, collective_time,
-                                  get_cluster, p2p_time)
+                                  get_cluster, p2p_time, ring_hops,
+                                  ring_volume_factor)
 from repro.core.profiler import (AnalyticalProvider, MeasuredProvider,
                                  Provider, ProviderStats, profiling_cost)
 from repro.core.timeline import (Timeline, Activity, LazyTimeline,
@@ -22,11 +24,12 @@ from repro.core.timeline import (Timeline, Activity, LazyTimeline,
 
 __all__ = [
     "DistSim", "SimResult", "Strategy", "Event", "ComposedEvent",
-    "EventFlowEngine",
+    "stage_signature", "EngineBuild", "EventFlowEngine",
     "grid_search", "SearchEntry", "ClusterSpec", "CLUSTERS", "V5E_POD",
     "A40_CLUSTER", "get_cluster", "AnalyticalProvider", "MeasuredProvider",
     "Provider", "ProviderStats", "profiling_cost",
     "Timeline", "Activity", "LazyTimeline", "TimelineBatch",
     "batch_time_error", "activity_error",
     "per_stage_error", "collective_time", "p2p_time",
+    "ring_hops", "ring_volume_factor",
 ]

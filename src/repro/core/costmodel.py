@@ -84,6 +84,29 @@ def compute_time(gemms: Tuple[GEMM, ...], chip: ChipSpec) -> float:
     return sum(gemm_time(g, chip) for g in gemms)
 
 
+def ring_hops(op: str, n_dev: int) -> int:
+    """Per-device hop count of a ring collective on n_dev devices
+    (all-reduce = reduce-scatter + all-gather, so twice the hops).
+    Shared by :func:`collective_time` and the >8-way extrapolation in
+    :meth:`repro.core.profiler.Provider._time`."""
+    if op == "all_reduce":
+        return 2 * (n_dev - 1)
+    if op in ("all_gather", "reduce_scatter", "all_to_all"):
+        return n_dev - 1
+    raise ValueError(op)
+
+
+def ring_volume_factor(op: str, n_dev: int) -> float:
+    """Bytes moved per device as a fraction of the full tensor — the
+    paper's §4.2 extrapolation quantity (2(N−1)/N for all-reduce),
+    shared with the profiler's >8-way extrapolation."""
+    if op == "all_reduce":
+        return 2.0 * (n_dev - 1) / n_dev
+    if op in ("all_gather", "reduce_scatter", "all_to_all"):
+        return (n_dev - 1) / n_dev
+    raise ValueError(op)
+
+
 def collective_time(op: str, nbytes: float, n_dev: int,
                     cluster: ClusterSpec, scope: str = "intra") -> float:
     """Ring-based collective on n_dev devices.
@@ -97,17 +120,8 @@ def collective_time(op: str, nbytes: float, n_dev: int,
     bw = cluster.intra_bw if scope == "intra" else cluster.inter_bw
     lat = (cluster.intra_latency if scope == "intra"
            else cluster.inter_latency)
-    if op == "all_reduce":
-        vol = 2.0 * (n_dev - 1) / n_dev * nbytes
-        hops = 2 * (n_dev - 1)
-    elif op in ("all_gather", "reduce_scatter"):
-        vol = (n_dev - 1) / n_dev * nbytes
-        hops = n_dev - 1
-    elif op == "all_to_all":
-        vol = (n_dev - 1) / n_dev * nbytes
-        hops = n_dev - 1
-    else:
-        raise ValueError(op)
+    vol = ring_volume_factor(op, n_dev) * nbytes
+    hops = ring_hops(op, n_dev)
     return vol / bw + hops * lat
 
 

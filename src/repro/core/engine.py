@@ -60,23 +60,33 @@ def _jittered(base: np.ndarray, rng, sigma: float) -> np.ndarray:
     return base * f
 
 
-class EventFlowEngine:
-    """One (stages × strategy × provider) simulation context.
+class EngineBuild:
+    """Schedule-independent precomputation of an engine build.
 
-    Build once, then ``run()`` any number of predict / replay variants —
-    event means, schedules, task metadata and activity names are all
-    precomputed here and shared across runs.
+    Everything here depends only on (stages, strategy *modulo schedule
+    and microbatch count*, provider): per-position event means, p2p
+    boundary means and the DP-level sync/optimizer means. The pipeline
+    schedule only reorders tasks over this structure, so one build is
+    shared by every same-vpp schedule of a (model, strategy) pair —
+    gpipe/1f1b/pipedream always; interleaved too unless its vpp=2
+    changes the position structure — the reuse
+    ``repro.validate.BuildCache`` exploits (verified bit-identical in
+    ``tests/test_sweep_scale.py``).
+
+    ``with_dp_sync=None`` (the cache's mode) precomputes the gradient
+    sync means whenever ``dp > 1`` so a later non-pipedream engine can
+    share a build first made for pipedream; passing the engine's actual
+    sync flag reproduces the historical lazy behavior exactly.
     """
 
     def __init__(self, stages: Sequence[Stage], strat: Strategy,
-                 provider: Provider):
+                 provider: Provider,
+                 with_dp_sync: Optional[bool] = None):
         self.stages = list(stages)
-        self.strat = strat
-        self.provider = provider
         cluster = provider.cluster
-        pp, m, vpp = strat.pp, strat.microbatches, strat.vpp
+        pp, vpp = strat.pp, strat.vpp
         self.n_pos = len(self.stages)
-        self.m = m
+        self.cache_version = provider.cache_version
 
         # ---- per-position event means (profiled once, reused) ----
         # Python-float sequential sums keep the predict path bit-identical
@@ -105,7 +115,7 @@ class EventFlowEngine:
         # ---- DP-level event means per pipeline device ----
         chip = cluster.chip
         dp = strat.dp
-        self.sync = dp > 1 and strat.schedule != "pipedream"
+        want_sync = dp > 1 if with_dp_sync is None else with_dp_sync
         self.ar_base: List[float] = []
         self.opt_base: List[float] = []
         for d in range(pp):
@@ -115,7 +125,7 @@ class EventFlowEngine:
                       / max(1, strat.mp))
             pbytes *= strat.grad_compress      # int8 compression what-if
             ar = 0.0
-            if self.sync:
+            if want_sync:
                 gspan = dp * pp * strat.mp
                 gscope = ("intra" if gspan <= cluster.devices_per_island
                           else "inter")
@@ -137,6 +147,50 @@ class EventFlowEngine:
             # AdamW: streams fp32 master params + m + v (~6 passes of 2x)
             opt_bytes = pbytes * (1.0 / dp if strat.zero1 else 1.0)
             self.opt_base.append(6.0 * opt_bytes * 2 / chip.hbm_bw)
+
+
+class EventFlowEngine:
+    """One (stages × strategy × provider) simulation context.
+
+    Build once, then ``run()`` any number of predict / replay variants —
+    event means, schedules, task metadata and activity names are all
+    precomputed here and shared across runs. Pass a precomputed
+    ``build`` (:class:`EngineBuild`) to share the schedule-independent
+    event-mean precomputation across engines that differ only in
+    pipeline schedule / microbatch count.
+    """
+
+    def __init__(self, stages: Sequence[Stage], strat: Strategy,
+                 provider: Provider, build: Optional[EngineBuild] = None):
+        self.strat = strat
+        self.provider = provider
+        pp, m, vpp = strat.pp, strat.microbatches, strat.vpp
+        self.m = m
+        dp = strat.dp
+        self.sync = dp > 1 and strat.schedule != "pipedream"
+        if build is None:
+            build = EngineBuild(stages, strat, provider,
+                                with_dp_sync=self.sync)
+        elif (len(build.stages) != len(stages)
+              or any(a is not b for a, b in zip(build.stages, stages))):
+            # a build for other stages would silently simulate the
+            # wrong model — the engine reads ONLY build.stages
+            raise ValueError("build was precomputed for different "
+                             "stages than the ones passed")
+        self.build = build
+        self.stages = build.stages
+        self.n_pos = build.n_pos
+        self.cache_version = build.cache_version
+        self.fwd_event_means = build.fwd_event_means
+        self.bwd_event_means = build.bwd_event_means
+        self.fwd_base = build.fwd_base
+        self.bwd_base = build.bwd_base
+        self.p2p_base = build.p2p_base
+        # non-syncing engines read zeros even when the shared build
+        # precomputed the (unused) sync means
+        self.ar_base = (build.ar_base if self.sync
+                        else [0.0] * pp)
+        self.opt_base = build.opt_base
 
         # ---- schedule task lists as flat per-device metadata ----
         sched = build_schedule(strat.schedule, pp, m, vpp)
@@ -168,6 +222,12 @@ class EventFlowEngine:
             self.task_p2p_name.append(p2p)
         self.total_tasks = sum(len(t) for t in self.task_isf)
         self._topo: Optional[List[Tuple[int, int]]] = None
+        # bounded FIFO: sweeps alternate two keys (predict + replay);
+        # the cap keeps long-lived cached engines from pinning one
+        # TimelineBatch per seed set ever requested
+        self._batch_memo: dict = {}
+
+    _BATCH_MEMO_MAX = 8
 
     # ------------------------------------------------------------------
     # noise sampling (vectorized; fixed draw order)
@@ -555,6 +615,16 @@ class EventFlowEngine:
         S = len(lane_seeds)
         noisy = (jitter_sigma > 0 or straggler_sigma > 0
                  or clock_sigma > 0)
+        # any batched run is a pure function of (build, seeds, sigmas) —
+        # memoized so cached engines (validate.BuildCache reuse across
+        # sweeps) skip the draw + recurrence pass entirely on a repeat.
+        # One entry per distinct (seeds, sigmas) combination actually
+        # requested; sweeps use one.
+        memo_key = (tuple(lane_seeds), jitter_sigma, straggler_sigma,
+                    clock_sigma)
+        hit = self._batch_memo.get(memo_key)
+        if hit is not None:
+            return hit
 
         samples = []
         any_rng = False
@@ -672,8 +742,12 @@ class EventFlowEngine:
                     off[lane])
             return materialize
 
-        return TimelineBatch(
+        batch = TimelineBatch(
             seeds=lane_seeds, n_devices=dp * pp * mp, dp=dp, pp=pp, mp=mp,
             n_sim=n_sim, batch_times=batch_times, busy=busy_dev,
             starts=starts_r, ends=ends_r, offsets=off,
             lane_builder=lane_builder)
+        if len(self._batch_memo) >= self._BATCH_MEMO_MAX:
+            self._batch_memo.pop(next(iter(self._batch_memo)))
+        self._batch_memo[memo_key] = batch
+        return batch

@@ -205,6 +205,22 @@ def stage_event_set(stages: List[Stage]) -> "set[Event]":
     return out
 
 
+def stage_signature(stages: List[Stage]) -> Tuple:
+    """Structural identity of a positions list — exactly what an
+    :class:`repro.core.engine.EventFlowEngine` reads from it: the
+    per-position fwd/bwd event tuples (structural ``Event`` identity,
+    names excluded) plus the boundary/param byte counts. Two lists with
+    equal signatures build bit-identical engines, so ``DistSim.engine``
+    keys its cache on this rather than on list object identity (which
+    both missed equal-content rebuilds and silently reused engines for
+    mutated lists)."""
+    return tuple(
+        (tuple(st.fwd.events) if st.fwd is not None else (),
+         tuple(st.bwd.events) if st.bwd is not None else (),
+         st.boundary_act_bytes, st.param_bytes)
+        for st in stages)
+
+
 def unique_events(stages: List[Stage], strat: Strategy,
                   devices_per_island: int) -> Dict[Event, int]:
     """All unique events with their total instance counts across the

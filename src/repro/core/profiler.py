@@ -23,7 +23,8 @@ import time
 from typing import Dict, Iterable
 
 from repro.core.costmodel import (ClusterSpec, V5E_POD, collective_time,
-                                  compute_time, p2p_time)
+                                  compute_time, p2p_time, ring_hops,
+                                  ring_volume_factor)
 from repro.core.events import Event
 
 
@@ -56,6 +57,10 @@ class Provider:
         self.cluster = cluster
         self._cache: Dict[Event, float] = {}
         self.stats = ProviderStats()
+        #: bumped on every cache clear; consumers that bake cached times
+        #: into derived structures (EventFlowEngine, validate.BuildCache)
+        #: stamp themselves with this and rebuild on mismatch.
+        self.cache_version = 0
 
     def time(self, e: Event) -> float:
         if e not in self._cache:
@@ -72,8 +77,30 @@ class Provider:
         return self._cache[e]
 
     def clear_cache(self) -> None:
-        """Drop profiled event times (stats are kept; reset separately)."""
+        """Drop profiled event times (stats are kept; reset separately).
+        Bumps :attr:`cache_version` so engines holding baked-in means
+        from the old cache are invalidated, not silently reused."""
         self._cache.clear()
+        self.cache_version += 1
+
+    # ---- parallel-sweep shard support (repro.validate.executor) ----
+    def cache_snapshot(self) -> Dict[Event, float]:
+        """Copy of the profiled-event cache (picklable: Events are
+        frozen dataclasses) — what a worker shard sends back."""
+        return dict(self._cache)
+
+    def merge_cache(self, entries: Dict[Event, float]) -> int:
+        """Merge a shard's profiled events; existing entries win (values
+        are identical for a deterministic provider — keeping the
+        incumbent makes the merge order-independent). Returns how many
+        events were new. Stats are NOT touched: the executor
+        reconstructs serial-equivalent accounting from shard lookups."""
+        fresh = 0
+        for e, t in entries.items():
+            if e not in self._cache:
+                self._cache[e] = t
+                fresh += 1
+        return fresh
 
     def _time(self, e: Event) -> float:
         if e.kind == "compute":
@@ -87,15 +114,12 @@ class Provider:
                 # exact — the paper bounds the residual effect at <2%.
                 lat = (self.cluster.intra_latency if e.scope == "intra"
                        else self.cluster.inter_latency)
-                hops8 = 2 * 7 if e.coll_op == "all_reduce" else 7
-                hopsn = (2 * (n - 1) if e.coll_op == "all_reduce"
-                         else n - 1)
-                t8 = collective_time(e.coll_op, e.nbytes, 8, self.cluster,
-                                     e.scope) - hops8 * lat
-                v8 = 2 * 7 / 8 if e.coll_op == "all_reduce" else 7 / 8
-                vn = (2 * (n - 1) / n if e.coll_op == "all_reduce"
-                      else (n - 1) / n)
-                return t8 * vn / v8 + hopsn * lat
+                t8 = (collective_time(e.coll_op, e.nbytes, 8, self.cluster,
+                                      e.scope)
+                      - ring_hops(e.coll_op, 8) * lat)
+                v8 = ring_volume_factor(e.coll_op, 8)
+                vn = ring_volume_factor(e.coll_op, n)
+                return t8 * vn / v8 + ring_hops(e.coll_op, n) * lat
             return collective_time(e.coll_op, e.nbytes, n, self.cluster,
                                    e.scope)
         if e.kind == "p2p":

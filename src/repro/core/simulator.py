@@ -18,7 +18,7 @@ from repro.configs.base import ArchConfig
 from repro.core.costmodel import V5E_POD
 from repro.core.engine import EventFlowEngine
 from repro.core.events import (Stage, Strategy, build_stage_events,
-                               unique_events)
+                               stage_signature, unique_events)
 from repro.core.hierarchy import build_positions
 from repro.core.profiler import (AnalyticalProvider, Provider,
                                  profile_events, profiling_cost)
@@ -46,7 +46,7 @@ class DistSim:
         self.provider = provider or AnalyticalProvider(V5E_POD)
         self._default_engine: Optional[EventFlowEngine] = None
         self._engine: Optional[EventFlowEngine] = None
-        self._engine_src: Optional[List[Stage]] = None
+        self._engine_key = None
         if global_batch % (strategy.dp * strategy.microbatches):
             raise ValueError(
                 f"global_batch {global_batch} not divisible by "
@@ -131,18 +131,40 @@ class DistSim:
                ) -> EventFlowEngine:
         """Event-flow engine for this sim. Reused across predict/replay
         calls (one slot for the default positions build, one keyed on
-        the caller's positions list) so the per-strategy schedule +
-        event-mean precomputation runs once per positions set."""
+        the caller's positions) so the per-strategy schedule +
+        event-mean precomputation runs once per positions set.
+
+        Explicit positions are keyed on STRUCTURAL content
+        (:func:`repro.core.events.stage_signature`), not list identity:
+        an equal-content list reuses the cached engine, and a
+        mutated-then-reused list rebuilds instead of silently returning
+        stale times. Either slot also rebuilds when the provider's
+        event cache was cleared since the engine baked in its means."""
         if positions is None:
-            if self._default_engine is None:
+            if (self._default_engine is None
+                    or self._stale(self._default_engine)):
                 self._default_engine = EventFlowEngine(
                     self.positions(), self.strategy, self.provider)
             return self._default_engine
-        if self._engine_src is not positions:
+        key = stage_signature(positions)
+        if (self._engine is None or self._engine_key != key
+                or self._stale(self._engine)):
             self._engine = EventFlowEngine(positions, self.strategy,
                                            self.provider)
-            self._engine_src = positions
+            self._engine_key = key
         return self._engine
+
+    def use_engine(self, engine: EventFlowEngine) -> None:
+        """Adopt a prebuilt default engine (the validate sweep's
+        :class:`~repro.validate.build_cache.BuildCache` hands sims
+        cached engines so per-cell predict/replay skips the build)."""
+        if engine.provider is not self.provider:
+            raise ValueError("engine was built against a different "
+                             "provider than this sim's")
+        self._default_engine = engine
+
+    def _stale(self, engine: EventFlowEngine) -> bool:
+        return engine.cache_version != self.provider.cache_version
 
     def _result(self, tl: Timeline) -> SimResult:
         bt = tl.batch_time
@@ -158,8 +180,7 @@ class DistSim:
 
     # ---- Table 3 accounting ----
     def profiling_report(self) -> Dict[str, float]:
-        micro = self.global_batch // (self.strategy.dp
-                                      * self.strategy.microbatches)
+        micro = self.microbatch()     # shared floor — paths can't drift
         stages = build_stage_events(self.cfg, self.strategy, micro, self.seq,
                                     self.provider.cluster.devices_per_island)
         counts = unique_events(stages, self.strategy,

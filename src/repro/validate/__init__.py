@@ -14,6 +14,7 @@ error, <5% per-device activity error, paper §5):
 ``tests/test_validation.py`` is the tier-1 gate with goldens under
 ``tests/goldens/``.
 """
+from repro.validate.build_cache import BuildCache, BuildCacheStats
 from repro.validate.metrics import (CellMetrics, aggregate, compare_batch,
                                     compare_timelines)
 from repro.validate.report import (dump, dumps, format_validation_report,
@@ -23,8 +24,9 @@ from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
                                   run_sweep, smoke_matrix)
 
 __all__ = [
-    "CellMetrics", "aggregate", "compare_batch", "compare_timelines",
-    "dump", "dumps", "format_validation_report", "load", "load_path",
-    "save", "CellResult", "SweepResult", "Thresholds", "ValidationCell",
+    "BuildCache", "BuildCacheStats", "CellMetrics", "aggregate",
+    "compare_batch", "compare_timelines", "dump", "dumps",
+    "format_validation_report", "load", "load_path", "save",
+    "CellResult", "SweepResult", "Thresholds", "ValidationCell",
     "full_matrix", "run_cell", "run_sweep", "smoke_matrix",
 ]

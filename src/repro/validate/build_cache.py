@@ -1,0 +1,175 @@
+"""Content-addressed build cache for the accuracy sweep (tentpole of
+the sweep-scale subsystem).
+
+The paper's unique-event dedup (Observation 1) makes *profiling* cheap,
+but the sweep was still rebuilding the per-cell model graph
+(``build_positions``) and the engine's event-mean precomputation for
+every cell — the dominant cost of small validation cells. Those builds
+are pure functions of ``(arch, smoke, strategy, microbatch, seq,
+cluster)``, and large parts of the key collapse further:
+
+* **positions** depend only on (arch, smoke, mp, pp·vpp, microbatch,
+  seq, cluster) — not on dp, schedule or the microbatch *count*;
+* the **engine build** (:class:`repro.core.engine.EngineBuild` — event
+  means, p2p/DP-sync/optimizer means) additionally depends on dp /
+  zero1 / grad_compress but still NOT on the pipeline schedule or
+  microbatch count: a schedule only reorders tasks over the same
+  stage/event structure (verified bit-identical in
+  ``tests/test_sweep_scale.py``), so the full matrix — where each
+  (model, strategy) pair recurs across 4 schedules — shares one build
+  across the same-vpp schedules of each pair (gpipe/1f1b/pipedream;
+  interleaved's vpp=2 builds its own position structure);
+* the **engine** itself (schedule task lists over a build) is cached on
+  the full key, so re-sweeping with a warm cache skips everything.
+
+Cached sweeps are bit-identical to uncached ones: every number the
+engine consumes is the same profiled float either way. The cache is
+bound to one provider and self-invalidates when that provider's event
+cache is cleared (``Provider.cache_version``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs.base import get_config, smoke_config
+from repro.core.engine import EngineBuild, EventFlowEngine
+from repro.core.events import Stage, Strategy
+from repro.core.hierarchy import build_positions
+from repro.core.profiler import Provider
+
+
+@dataclasses.dataclass
+class BuildCacheStats:
+    """Hit/miss accounting per cache level (reported by
+    ``benchmarks/bench_validate.py``)."""
+    positions_hits: int = 0
+    positions_misses: int = 0
+    build_hits: int = 0
+    build_misses: int = 0
+    engine_hits: int = 0
+    engine_misses: int = 0
+    invalidations: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.positions_hits + self.build_hits + self.engine_hits
+
+    @property
+    def misses(self) -> int:
+        return (self.positions_misses + self.build_misses
+                + self.engine_misses)
+
+    def to_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def merge(self, other: "BuildCacheStats") -> None:
+        """Accumulate a worker shard's accounting (parallel executor)."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+def _strip_schedule(strat: Strategy) -> Strategy:
+    """The strategy modulo schedule + microbatch count — the part an
+    :class:`EngineBuild` actually depends on."""
+    return dataclasses.replace(strat, schedule="", microbatches=1)
+
+
+class BuildCache:
+    """Per-provider cache of positions / engine builds / engines.
+
+    All keys are content-addressed (arch name + smoke flag + frozen
+    ``Strategy`` + derived microbatch + seq); the cluster is implied by
+    the bound provider. Use one cache per sweep (or per worker shard —
+    see :mod:`repro.validate.executor`).
+    """
+
+    def __init__(self, provider: Provider):
+        self.provider = provider
+        self._positions: Dict[Tuple, List[Stage]] = {}
+        self._builds: Dict[Tuple, EngineBuild] = {}
+        self._engines: Dict[Tuple, EventFlowEngine] = {}
+        self._version = provider.cache_version
+        self.stats = BuildCacheStats()
+
+    # ------------------------------------------------------------------
+
+    def _check_version(self) -> None:
+        """Everything cached here bakes in provider event means — a
+        provider cache clear invalidates all three levels at once."""
+        if self._version != self.provider.cache_version:
+            self._positions.clear()
+            self._builds.clear()
+            self._engines.clear()
+            self._version = self.provider.cache_version
+            self.stats.invalidations += 1
+
+    @staticmethod
+    def _microbatch(strat: Strategy, global_batch: int) -> int:
+        return max(1, global_batch // (strat.dp * strat.microbatches))
+
+    def positions(self, arch: str, smoke: bool, strat: Strategy,
+                  microbatch: int, seq: int) -> List[Stage]:
+        self._check_version()
+        key = (arch, smoke, strat.mp, strat.pp, strat.vpp, microbatch,
+               seq)
+        hit = self._positions.get(key)
+        if hit is not None:
+            self.stats.positions_hits += 1
+            return hit
+        self.stats.positions_misses += 1
+        cfg = get_config(arch)
+        if smoke:
+            cfg = smoke_config(cfg)
+        pos = build_positions(cfg, strat, microbatch, seq,
+                              self.provider.cluster)
+        self._positions[key] = pos
+        return pos
+
+    def build(self, arch: str, smoke: bool, strat: Strategy,
+              microbatch: int, seq: int) -> EngineBuild:
+        self._check_version()
+        key = (arch, smoke, _strip_schedule(strat), microbatch, seq)
+        hit = self._builds.get(key)
+        if hit is not None:
+            self.stats.build_hits += 1
+            return hit
+        self.stats.build_misses += 1
+        pos = self.positions(arch, smoke, strat, microbatch, seq)
+        # with_dp_sync=None: precompute sync means whenever dp > 1 so
+        # pipedream and the syncing schedules share one build
+        build = EngineBuild(pos, strat, self.provider, with_dp_sync=None)
+        self._builds[key] = build
+        return build
+
+    def engine(self, arch: str, smoke: bool, strat: Strategy,
+               global_batch: int, seq: int) -> EventFlowEngine:
+        self._check_version()
+        micro = self._microbatch(strat, global_batch)
+        key = (arch, smoke, strat, micro, seq)
+        hit = self._engines.get(key)
+        if hit is not None:
+            self.stats.engine_hits += 1
+            return hit
+        self.stats.engine_misses += 1
+        build = self.build(arch, smoke, strat, micro, seq)
+        eng = EventFlowEngine(build.stages, strat, self.provider,
+                              build=build)
+        self._engines[key] = eng
+        return eng
+
+    def engine_for(self, cell) -> EventFlowEngine:
+        """Engine for a :class:`repro.validate.sweep.ValidationCell`."""
+        return self.engine(cell.arch, cell.smoke, cell.strategy,
+                           cell.global_batch, cell.seq)
+
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, int]:
+        """Accounting summary: per-level hits/misses + entry counts."""
+        out = self.stats.to_dict()
+        out.update(positions_entries=len(self._positions),
+                   build_entries=len(self._builds),
+                   engine_entries=len(self._engines))
+        return out

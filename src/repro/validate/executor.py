@@ -1,0 +1,136 @@
+"""Parallel sweep executor (tentpole of the sweep-scale subsystem).
+
+The accuracy sweep is embarrassingly parallel per cell: cells only
+interact through the shared profiling provider (the paper's
+unique-event dedup) and the shared build cache. ``run_parallel`` fans
+cells out over worker processes, each with its OWN provider shard
+(seeded with the parent's already-profiled events) and its own
+:class:`~repro.validate.build_cache.BuildCache`, then merges the
+shards back deterministically:
+
+* **results** are reassembled in cell order, so the merged
+  ``SweepResult`` — and its ``report.dump()`` JSON — is bit-identical
+  to the serial sweep's (every per-cell number is a deterministic
+  function of the cell + provider, not of scheduling);
+* **event caches** merge by set-union with incumbent-wins semantics
+  (values are identical across shards for a deterministic provider),
+  so ``ProviderStats.evaluations`` afterwards equals the serial
+  sweep's unique-event count: an event profiled by two shards still
+  counts ONCE, exactly as the paper's Table 3 accounting requires;
+* **hits** absorb the remaining shard lookups, so ``lookups`` stays
+  the true number of provider queries performed.
+
+Workers are spawned via fork where available (cheap, no re-import);
+the payloads (cells, provider, thresholds) are all plain picklable
+dataclasses, so spawn-only platforms work too.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import sys
+from concurrent.futures import ProcessPoolExecutor
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.profiler import Provider
+from repro.validate.build_cache import BuildCache, BuildCacheStats
+from repro.validate.sweep import (CellResult, Thresholds, ValidationCell,
+                                  run_cell)
+
+
+def _mp_context():
+    """fork is the cheap path (no re-import in workers), but forking a
+    process that already initialized JAX's thread pools can deadlock —
+    fall back to spawn whenever jax is loaded (e.g. under the full
+    test session). The sweep itself is numpy-only either way."""
+    methods = multiprocessing.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return multiprocessing.get_context("fork")
+    return multiprocessing.get_context("spawn")
+
+
+def _chunk(n: int, jobs: int) -> List[range]:
+    """Contiguous near-even index chunks. Contiguity matters: the full
+    matrix lists each (model, strategy) pair's four schedules
+    consecutively, so keeping neighbors together maximizes each
+    worker's build-cache hit rate."""
+    base, extra = divmod(n, jobs)
+    out, start = [], 0
+    for w in range(jobs):
+        size = base + (1 if w < extra else 0)
+        out.append(range(start, start + size))
+        start += size
+    return [r for r in out if len(r)]
+
+
+def _run_shard(payload) -> Tuple[List[Tuple[int, CellResult]], dict, int,
+                                 BuildCacheStats]:
+    """One worker: run a slice of cells against a private provider
+    shard; report results, the shard's newly-profiled events, its
+    lookup count and its build-cache accounting."""
+    (provider, indexed_cells, seeds, thresholds, jitter_sigma, batched,
+     use_cache) = payload
+    provider.stats.reset()
+    known = set(provider.cache_snapshot())
+    cache = BuildCache(provider) if use_cache else None
+    results = [(idx, run_cell(cell, provider, seeds, thresholds,
+                              jitter_sigma, batched=batched, cache=cache))
+               for idx, cell in indexed_cells]
+    delta = {e: t for e, t in provider.cache_snapshot().items()
+             if e not in known}
+    cache_stats = cache.stats if cache is not None else BuildCacheStats()
+    return results, delta, provider.stats.lookups, cache_stats
+
+
+def run_parallel(cells: Sequence[ValidationCell], provider: Provider,
+                 seeds: Sequence[int] = (0, 1, 2),
+                 thresholds: Optional[Thresholds] = None,
+                 jitter_sigma: float = 0.025, jobs: int = 2,
+                 batched: bool = True, use_cache: bool = True,
+                 cache_stats: Optional[BuildCacheStats] = None
+                 ) -> List[CellResult]:
+    """Evaluate ``cells`` across ``jobs`` worker processes.
+
+    Mutates ``provider`` exactly as the serial sweep would: its event
+    cache gains the union of all shards' profiled events and its stats
+    advance by the serial-equivalent (evaluations += newly unique,
+    hits += remaining lookups). Pass ``cache_stats`` to additionally
+    accumulate the shards' build-cache accounting.
+    """
+    thresholds = thresholds or Thresholds()
+    cells = list(cells)
+    jobs = max(1, min(int(jobs), len(cells) or 1))
+    if jobs == 1:
+        cache = BuildCache(provider) if use_cache else None
+        out = [run_cell(c, provider, seeds, thresholds, jitter_sigma,
+                        batched=batched, cache=cache)
+               for c in cells]
+        if cache is not None and cache_stats is not None:
+            cache_stats.merge(cache.stats)
+        return out
+
+    payloads = []
+    for idx_range in _chunk(len(cells), jobs):
+        indexed = [(i, cells[i]) for i in idx_range]
+        payloads.append((provider, indexed, tuple(seeds), thresholds,
+                         jitter_sigma, batched, use_cache))
+
+    with ProcessPoolExecutor(max_workers=len(payloads),
+                             mp_context=_mp_context()) as pool:
+        shards = list(pool.map(_run_shard, payloads))
+
+    results: List[Optional[CellResult]] = [None] * len(cells)
+    new_events = 0
+    total_lookups = 0
+    for shard_results, delta, lookups, shard_cache_stats in shards:
+        for idx, res in shard_results:
+            results[idx] = res
+        new_events += provider.merge_cache(delta)
+        total_lookups += lookups
+        if cache_stats is not None:
+            cache_stats.merge(shard_cache_stats)
+    # serial-equivalent accounting: each unique event counts once no
+    # matter how many shards profiled it; everything else was a reuse
+    provider.stats.evaluations += new_events
+    provider.stats.hits += total_lookups - new_events
+    assert all(r is not None for r in results)
+    return results

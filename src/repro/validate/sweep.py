@@ -22,6 +22,7 @@ from repro.core.events import Strategy
 from repro.core.profiler import AnalyticalProvider, Provider
 from repro.core.serde import dataclass_from_dict
 from repro.core.simulator import DistSim
+from repro.validate.build_cache import BuildCache
 from repro.validate.metrics import (CellMetrics, aggregate, compare_batch,
                                     compare_timelines)
 
@@ -159,7 +160,12 @@ def smoke_matrix() -> List[ValidationCell]:
 
 def full_matrix() -> List[ValidationCell]:
     """Nightly-scale cross product (models x schedules x strategies);
-    infeasible (batch-divisibility) combos are skipped."""
+    infeasible (batch-divisibility) combos are skipped. Extended with
+    predict-scale scenario-diversity cells: full-size 52–145B models
+    (dense, fine-grained MoE, SSM/attention hybrid, VLM) at 64–128
+    device strategies — affordable because the 4 schedules of each
+    (model, strategy) pair share one cached engine build and the sweep
+    fans out across worker processes (``run_sweep(jobs=N)``)."""
     archs = [("gpt2_345m", False), ("bert_large", False),
              ("t5_large", False), ("qwen3_moe_30b_a3b", True)]
     strategies = [(1, 2, 2, 4), (2, 2, 2, 4), (1, 4, 1, 8), (2, 4, 1, 8),
@@ -174,6 +180,16 @@ def full_matrix() -> List[ValidationCell]:
                 vpp = 2 if schedule == "interleaved" and pp > 1 else 1
                 out.append(_cell(arch, mp, pp, dp, m, schedule, vpp=vpp,
                                  gb=gb, smoke=smoke))
+    # predict-scale cells: full-size models, 64-128 devices
+    big_archs = ["gpt_145b", "dbrx_132b", "jamba_v0_1_52b",
+                 "qwen2_vl_72b"]
+    big_strategies = [(8, 8, 2, 8), (2, 16, 2, 8)]
+    for arch in big_archs:
+        for mp, pp, dp, m in big_strategies:
+            for schedule in ("gpipe", "1f1b", "interleaved", "pipedream"):
+                vpp = 2 if schedule == "interleaved" else 1
+                out.append(_cell(arch, mp, pp, dp, m, schedule, vpp=vpp,
+                                 gb=64, seq=1024))
     return out
 
 
@@ -184,12 +200,16 @@ def full_matrix() -> List[ValidationCell]:
 def run_cell(cell: ValidationCell, provider: Provider,
              seeds: Sequence[int] = (0, 1, 2),
              thresholds: Optional[Thresholds] = None,
-             jitter_sigma: float = 0.025, batched: bool = True
-             ) -> CellResult:
+             jitter_sigma: float = 0.025, batched: bool = True,
+             cache: Optional[BuildCache] = None) -> CellResult:
     """One sweep point: one engine build, one batched replay over all
     seeds, array-native metrics (no ``Activity`` materialization).
 
-    ``batched=False`` keeps the historical path — S sequential
+    ``cache`` (a :class:`BuildCache` bound to ``provider``) serves the
+    cell's engine content-addressed, so repeated (model, strategy)
+    structure — e.g. the same pair under another schedule — skips the
+    model-graph + event-mean rebuild; results are bit-identical either
+    way. ``batched=False`` keeps the historical path — S sequential
     ``replay()`` calls compared via materialized activity lists — as
     the differential baseline for ``tests/test_validation.py`` and the
     seed-scaling section of ``benchmarks/bench_timeline.py``.
@@ -197,6 +217,8 @@ def run_cell(cell: ValidationCell, provider: Provider,
     thresholds = thresholds or Thresholds()
     sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
                   cell.seq, provider)
+    if cache is not None:
+        sim.use_engine(cache.engine_for(cell))
     if batched:
         pred_b = sim.predict_batched()
         rep_b = sim.replay_batched(seeds, jitter_sigma=jitter_sigma)
@@ -224,16 +246,47 @@ def run_sweep(cells: Optional[Sequence[ValidationCell]] = None,
               thresholds: Optional[Thresholds] = None,
               jitter_sigma: float = 0.025,
               provider: Optional[Provider] = None,
-              batched: bool = True) -> SweepResult:
-    """Run the matrix; one shared provider = one event profile cache."""
+              batched: bool = True,
+              cache: Union[bool, BuildCache] = True,
+              jobs: int = 1) -> SweepResult:
+    """Run the matrix; one shared provider = one event profile cache.
+
+    ``cache`` — ``True`` (default) shares one content-addressed
+    :class:`BuildCache` across all cells (pass your own instance to
+    keep it warm across *serial* sweeps, or ``False`` to rebuild per
+    cell); either way the report is bit-identical. ``jobs > 1`` fans
+    cells out across worker processes (:mod:`repro.validate.executor`)
+    with per-worker provider shards, merged back so the report — and
+    the provider's unique-event accounting — matches the serial sweep.
+    Workers build their own caches (engines hold unpicklable state),
+    so with ``jobs > 1`` a passed instance only accumulates the
+    shards' hit/miss accounting — it is neither consulted nor warmed.
+    """
     if isinstance(cluster, str):
         cluster = get_cluster(cluster)
     cells = list(cells) if cells is not None else smoke_matrix()
     thresholds = thresholds or Thresholds()
+    if provider is None and isinstance(cache, BuildCache):
+        provider = cache.provider     # a warm cache implies its provider
     provider = provider or AnalyticalProvider(cluster)
-    results = [run_cell(c, provider, seeds, thresholds, jitter_sigma,
-                        batched=batched)
-               for c in cells]
+    if isinstance(cache, BuildCache) and cache.provider is not provider:
+        raise ValueError("cache is bound to a different provider than "
+                         "the sweep's")
+    if jobs and jobs > 1:
+        from repro.validate.executor import run_parallel
+        results = run_parallel(
+            cells, provider, seeds, thresholds, jitter_sigma, jobs=jobs,
+            batched=batched, use_cache=bool(cache),
+            cache_stats=cache.stats if isinstance(cache, BuildCache)
+            else None)
+    else:
+        if isinstance(cache, BuildCache):
+            bc: Optional[BuildCache] = cache
+        else:
+            bc = BuildCache(provider) if cache else None
+        results = [run_cell(c, provider, seeds, thresholds, jitter_sigma,
+                            batched=batched, cache=bc)
+                   for c in cells]
     return SweepResult(cells=results, thresholds=thresholds,
                        cluster=provider.cluster.name, seeds=list(seeds),
                        jitter_sigma=jitter_sigma)
