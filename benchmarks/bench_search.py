@@ -8,14 +8,20 @@ Compares three engine configurations on the same grid:
 * ``pruned`` — shared cache + memory filter + work-lower-bound pruning
   (the production path).
 
+``--megabatch`` adds a warm-cache A/B: the same SearchEngine grid run
+per-cell vs through the mega-batch array program, asserting identical
+rankings and bit-identical batch times, and gating (in ``--smoke``)
+on a >=10x evals/sec speedup.
+
 Prints ``name,us_per_call,derived`` CSV like ``benchmarks/run.py``.
 
-    PYTHONPATH=src python benchmarks/bench_search.py [--smoke]
+    PYTHONPATH=src python benchmarks/bench_search.py [--smoke] [--megabatch]
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 from repro.configs.base import get_config, smoke_config
 from repro.core import get_cluster
@@ -38,10 +44,70 @@ def run_mode(name, cfg, clusters, devices, gb, seq, grid, share_cache,
     return res, row
 
 
+def bench_megabatch(cfg, clusters, devices, gb, seq, grid, smoke,
+                    repeats=5):
+    """Warm-cache repeat-search A/B: per-cell vs mega-batch lane.
+
+    Both engines share a BuildCache-backed ProfileCache, are warmed
+    once, then timed best-of-N on the repeat search — isolating the
+    predict evaluation (the part the array program vectorizes) from
+    one-time profiling. Returns CSV rows; exits nonzero on a ranking
+    or batch-time mismatch, or (in smoke mode) a <10x speedup.
+    """
+    percell = SearchEngine(cfg, clusters=clusters, share_cache=True,
+                           prune=False, check_memory=True,
+                           megabatch=False)
+    mega = SearchEngine(cfg, clusters=clusters, share_cache=True,
+                        prune=False, check_memory=True, megabatch=True)
+    r_cell = percell.search(devices, gb, seq, **grid)   # warm caches
+    r_mega = mega.search(devices, gb, seq, **grid)
+
+    same_rank = ([e.strategy for e in r_cell.entries]
+                 == [e.strategy for e in r_mega.entries])
+    same_times = all(a.batch_time == b.batch_time
+                     for a, b in zip(r_cell.entries, r_mega.entries))
+    if not (same_rank and same_times):
+        print("search/ERROR,0,megabatch ranking/batch-time mismatch",
+              file=sys.stderr)
+        sys.exit(1)
+
+    def best_of(engine):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            engine.search(devices, gb, seq, **grid)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_cell, t_mega = best_of(percell), best_of(mega)
+    evaluated = r_mega.stats.evaluated
+    speedup = t_cell / t_mega if t_mega else 0.0
+    rows = [
+        ("search/megabatch_percell", t_cell * 1e6,
+         f"evals/s={evaluated / t_cell:.1f} lanes=0"),
+        ("search/megabatch_vectorized", t_mega * 1e6,
+         f"evals/s={evaluated / t_mega:.1f} "
+         f"lanes={r_mega.stats.megabatch_lanes} "
+         f"backend=auto bitwise_identical=True"),
+        ("search/megabatch_speedup", 0.0,
+         f"warm_vectorized_vs_percell={speedup:.2f}x"),
+    ]
+    if smoke and speedup < 10.0:
+        rows.append(("search/ERROR", 0.0,
+                     f"megabatch speedup {speedup:.2f}x < 10x gate"))
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        sys.exit(1)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config + small grid (CI job)")
+    ap.add_argument("--megabatch", action="store_true",
+                    help="add the warm per-cell vs mega-batch A/B "
+                         "(>=10x gate in smoke mode)")
     ap.add_argument("--arch", default="bert_exlarge")
     ap.add_argument("--devices", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=64)
@@ -84,6 +150,9 @@ def main() -> None:
              if naive_res.stats.candidates_per_s else 0.0)
     rows.append(("search/speedup", 0.0,
                  f"pruned_vs_naive={speed:.2f}x"))
+    if args.megabatch:
+        rows.extend(bench_megabatch(cfg, clusters, devices, gb, seq,
+                                    grid, args.smoke))
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
 

@@ -84,11 +84,11 @@ def bench_cell(cfg, provider, devices: int, with_polling: bool,
         "tasks": engine.total_tasks * dp,
         "engine_build_s": build_s,
         "engine_predict_s": _best_of(
-            lambda: sim.predict(positions=pos)),
+            lambda: engine.run()),
         "engine_replay_s": _best_of(
-            lambda: sim.replay(seed=0, positions=pos)),
+            lambda: engine.run(jitter_sigma=0.025, seed=0)),
     }
-    tl = sim.predict(positions=pos).timeline
+    tl = engine.run()
     t0 = time.perf_counter()
     acts = tl.activities               # lazy -> materialize now
     cell["materialize_s"] = time.perf_counter() - t0

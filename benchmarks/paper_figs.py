@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Strategy,
-                        activity_error, batch_time_error, grid_search,
+                        activity_error, batch_time_error,
                         per_stage_error)
 
 Row = Tuple[str, float, str]
@@ -48,11 +48,10 @@ def fig8_batch_time() -> List[Row]:
         for label, strat in _STRATS:
             sim = DistSim(cfg, strat, global_batch=16, seq=512,
                           provider=PROVIDER)
-            pred = sim.predict()
-            errs = []
-            for seed in range(5):
-                act = sim.replay(seed=seed, jitter_sigma=0.025)
-                errs.append(batch_time_error(pred.timeline, act.timeline))
+            pred = sim.simulate().result()
+            batch = sim.simulate(seeds=range(5), jitter_sigma=0.025)
+            errs = [batch_time_error(pred.timeline, batch.timeline(i))
+                    for i in range(len(batch))]
             err = float(np.mean(errs))
             worst = max(worst, err)
             rows.append((f"fig8/{model}/{label}",
@@ -70,9 +69,9 @@ def fig9_device_activity() -> List[Row]:
         cfg = get_config(model)
         for label, strat in _STRATS[:5]:
             sim = DistSim(cfg, strat, 16, 512, PROVIDER)
-            pred = sim.predict()
-            act = sim.replay(seed=1, jitter_sigma=0.025,
-                             clock_sigma=2e-5)
+            pred = sim.simulate().result()
+            act = sim.simulate(seeds=1, jitter_sigma=0.025,
+                               clock_sigma=2e-5).result()
             errs = activity_error(pred.timeline, act.timeline)
             e = max(errs.values())
             worst = max(worst, e)
@@ -92,11 +91,12 @@ def fig10_per_stage() -> List[Row]:
     cfg = get_config("bert_large")
     strat = Strategy(mp=2, pp=4, dp=1, microbatches=4)
     sim = DistSim(cfg, strat, 16, 512, PROVIDER)
-    pred = sim.predict()
+    pred = sim.simulate().result()
     per_key = {}
-    for seed in range(20):
-        act = sim.replay(seed=seed, jitter_sigma=0.025)
-        for k, v in per_stage_error(pred.timeline, act.timeline).items():
+    batch = sim.simulate(seeds=range(20), jitter_sigma=0.025)
+    for i in range(len(batch)):
+        for k, v in per_stage_error(pred.timeline,
+                                    batch.timeline(i)).items():
             per_key.setdefault(k, []).append(v)
     medians = {k: float(np.median(v)) for k, v in per_key.items()}
     worst = max(medians.values())
@@ -134,7 +134,7 @@ def fig11_large_scale() -> List[Row]:
         strat = Strategy(mp=8, pp=16, dp=1, microbatches=gb)
         sim = DistSim(cfg, strat, global_batch=gb, seq=2048,
                       provider=PROVIDER)
-        res = sim.predict()
+        res = sim.simulate().result()
         ours.append(gb / res.batch_time)          # samples/s
     # both curves normalized to the smallest batch: samples/s ratio vs
     # achieved-FLOP/s ratio (same model ⇒ directly comparable trends)
@@ -157,16 +157,19 @@ def fig12_table2_search() -> List[Row]:
     global batch 16. Paper: best 2.94 it/s, worst 0.398, speedup 7.379x;
     actual measurement confirms the ranking."""
     cfg = get_config("bert_exlarge")
+    from repro.search import ProfileCache, SearchEngine
     t0 = time.perf_counter()
-    entries = grid_search(cfg, 16, 16, 512, provider=PROVIDER)
+    entries = SearchEngine(
+        cfg, cache=ProfileCache.from_provider(PROVIDER),
+        prune=False, check_memory=False).search(16, 16, 512).entries
     search_time = time.perf_counter() - t0
     feasible = [e for e in entries if e.feasible]
     best, second, worst = feasible[0], feasible[1], feasible[-1]
     # "actual" verification via replay oracle
     act_best = DistSim(cfg, best.strategy, 16, 512, PROVIDER
-                       ).replay(seed=0)
+                       ).simulate(seeds=0).result()
     act_worst = DistSim(cfg, worst.strategy, 16, 512, PROVIDER
-                        ).replay(seed=0)
+                        ).simulate(seeds=0).result()
     rows = [
         ("fig12/best", best.batch_time * 1e6,
          f"{best.strategy.label()}@m{best.strategy.microbatches}"
@@ -249,11 +252,11 @@ def straggler_whatif() -> List[Row]:
     cfg = get_config("bert_large")
     strat = Strategy(mp=1, pp=2, dp=4, microbatches=4)
     sim = DistSim(cfg, strat, 16, 512, PROVIDER)
-    healthy = sim.predict().batch_time
+    healthy = sim.simulate().batch_time
 
     # policy 0: tolerate the straggler (sync stall at the gradient AR)
-    slow = sim.replay(seed=7, jitter_sigma=0.0, straggler_sigma=0.0,
-                      clock_sigma=0.0)
+    slow = sim.simulate(seeds=7, jitter_sigma=0.0, straggler_sigma=0.0,
+                        clock_sigma=0.0)
     from repro.core.hierarchy import construct_timeline
     tl = construct_timeline(cfg, strat, 16, 512, sim.provider,
                             straggler_sigma=0.3, seed=7)
@@ -261,7 +264,8 @@ def straggler_whatif() -> List[Row]:
 
     # policy 1: drop to dp=3 ⇒ invalid (16 % 3); re-plan to dp=2
     strat2 = Strategy(mp=1, pp=2, dp=2, microbatches=4)
-    dropped = DistSim(cfg, strat2, 16, 512, PROVIDER).predict().batch_time
+    dropped = DistSim(cfg, strat2, 16, 512,
+                      PROVIDER).simulate().batch_time
 
     rows = [
         ("straggler/healthy", healthy * 1e6, "baseline"),
@@ -284,7 +288,8 @@ def fig2_schedule_comparison() -> List[Row]:
         strat = Strategy(mp=1, pp=4, dp=1, microbatches=8,
                          schedule=name, vpp=2 if name == "interleaved"
                          else 1)
-        res = DistSim(cfg, strat, 8, 512, PROVIDER).predict()
+        res = DistSim(cfg, strat, 8, 512,
+                      PROVIDER).simulate().result()
         rows.append((f"fig2/{name}", res.batch_time * 1e6,
                      f"bubble={res.bubble_fraction*100:.1f}%"))
     return rows
@@ -304,7 +309,8 @@ def grad_compression_whatif() -> List[Row]:
     for label, ratio in (("fp16", 1.0), ("int8", 0.5), ("int8+ef", 0.25)):
         strat = Strategy(mp=1, pp=1, dp=16, microbatches=1,
                          grad_compress=ratio)
-        res = DistSim(cfg, strat, 16, 512, PROVIDER).predict()
+        res = DistSim(cfg, strat, 16, 512,
+                      PROVIDER).simulate().result()
         rows.append((f"grad_compress/{label}", res.batch_time * 1e6,
                      f"{res.throughput_iters:.2f} it/s"))
     base = float(rows[0][1])

@@ -10,7 +10,7 @@ to failure recovery.
 import tempfile
 
 from repro.configs.base import get_config, smoke_config
-from repro.core import A40_CLUSTER, AnalyticalProvider, grid_search
+from repro.core import A40_CLUSTER, AnalyticalProvider
 from repro.train.fault_tolerance import (HeartbeatMonitor, replan_mesh,
                                          run_with_recovery)
 from repro.train.train_loop import LoopConfig, fit
@@ -62,10 +62,12 @@ def main():
           f"({plan.devices} devices used)")
 
     # DistSim picks the best strategy for the new world size
+    from repro.search import ProfileCache, SearchEngine
     provider = AnalyticalProvider(A40_CLUSTER)
-    entries = grid_search(get_config("bert_large"), plan.devices, 16, 512,
-                          provider=provider)
-    best = [e for e in entries if e.feasible][0]
+    engine = SearchEngine(get_config("bert_large"),
+                          cache=ProfileCache.from_provider(provider),
+                          prune=False, check_memory=False)
+    best = engine.search(plan.devices, 16, 512).best()
     print(f"DistSim re-planned strategy: {best.strategy.label()} "
           f"@ {best.iters_per_s:.2f} it/s")
 

@@ -1,5 +1,9 @@
 """Quickstart: model a hybrid distributed training strategy with DistSim.
 
+One API surface: ``sim.simulate()`` is the zero-noise prediction,
+``sim.simulate(seeds=...)`` the replay oracle; both return a
+``SimBatch`` (``.result()`` unwraps a single lane).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs.base import get_config
@@ -14,7 +18,7 @@ provider = AnalyticalProvider(A40_CLUSTER)
 strat = Strategy(mp=2, pp=2, dp=4, microbatches=4, schedule="1f1b")
 sim = DistSim(cfg, strat, global_batch=16, seq=512, provider=provider)
 
-pred = sim.predict()
+pred = sim.simulate().result()
 print(f"strategy          : {strat.label()} x{strat.microbatches} micro")
 print(f"predicted batch   : {pred.batch_time*1e3:.2f} ms "
       f"({pred.throughput_iters:.2f} it/s, "
@@ -28,7 +32,7 @@ print("device utilization:",
       "...")
 
 # the replay oracle ("actual run" stand-in) confirms the prediction
-act = sim.replay(seed=0)
+act = sim.simulate(seeds=0).result()
 err = batch_time_error(pred.timeline, act.timeline)
 print(f"replay batch      : {act.batch_time*1e3:.2f} ms "
       f"(prediction error {err*100:.2f}%)")

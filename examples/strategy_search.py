@@ -60,7 +60,7 @@ def main():
     cluster = next(c for c in clusters if c.name == best.cluster)
     provider = engine.cache.provider(cluster)
     act = DistSim(cfg, best.strategy, args.global_batch, args.seq,
-                  provider).replay(seed=0)
+                  provider).simulate(seeds=0).result()
     print(f"\nreplay-verified best ({best.strategy.label()} on "
           f"{best.cluster}): {1 / act.batch_time:.2f} it/s "
           f"(predicted {best.iters_per_s:.2f})")

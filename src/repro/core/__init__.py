@@ -5,12 +5,14 @@ profiling providers, hierarchical MP→PP→DP timeline construction, the
 replay oracle, and the strategy-search use-case.
 
 Public API:
-    from repro.core import DistSim, Strategy, grid_search
+    from repro.core import DistSim, SimBatch, Strategy
 """
 from repro.core.events import (Strategy, Event, ComposedEvent,
                                stage_signature)
 from repro.core.engine import EngineBuild, EventFlowEngine
-from repro.core.simulator import DistSim, SimResult
+from repro.core.simulator import DistSim, SimBatch, SimResult
+from repro.core.megabatch import (MegaBatch, MegaPredict,
+                                  megabatch_predict)
 from repro.core.search import grid_search, SearchEntry
 from repro.core.costmodel import (ClusterSpec, CLUSTERS, V5E_POD,
                                   A40_CLUSTER, collective_time,
@@ -23,8 +25,9 @@ from repro.core.timeline import (Timeline, Activity, LazyTimeline,
                                  activity_error, per_stage_error)
 
 __all__ = [
-    "DistSim", "SimResult", "Strategy", "Event", "ComposedEvent",
-    "stage_signature", "EngineBuild", "EventFlowEngine",
+    "DistSim", "SimBatch", "SimResult", "Strategy", "Event",
+    "ComposedEvent", "stage_signature", "EngineBuild", "EventFlowEngine",
+    "MegaBatch", "MegaPredict", "megabatch_predict",
     "grid_search", "SearchEntry", "ClusterSpec", "CLUSTERS", "V5E_POD",
     "A40_CLUSTER", "get_cluster", "AnalyticalProvider", "MeasuredProvider",
     "Provider", "ProviderStats", "profiling_cost",

@@ -14,7 +14,7 @@ extends to any N; we add the per-hop latency term that matters at small P.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, Tuple
 
 from repro.core.hw import ChipSpec, V5E, mxu_efficiency
 from repro.core.modelgraph import GEMM
@@ -29,6 +29,17 @@ class ClusterSpec:
     inter_bw: float                  # bytes/s per device, cross-island
     intra_latency: float
     inter_latency: float
+
+    # dict round-trip matching Strategy's, so search reports serialize
+    # clusters as full specs (custom clusters survive a report
+    # round-trip; a registry name alone can't say what "tiny-a40" was)
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ClusterSpec":
+        from repro.core.serde import dataclass_from_dict
+        return dataclass_from_dict(cls, d)
 
 
 V5E_POD = ClusterSpec(

@@ -589,6 +589,13 @@ class EventFlowEngine:
         self._topo = order
         return order
 
+    def topo_order(self) -> List[Tuple[int, int]]:
+        """Public accessor for the cached duration-free topological
+        order — the contract :class:`repro.core.megabatch.MegaBatch`
+        compiles against (step j of the array program evaluates the
+        j-th entry of this order for every candidate)."""
+        return self._topo_order()
+
     def run_batched(self, seeds: Optional[Sequence[Optional[int]]] = None,
                     jitter_sigma: float = 0.0,
                     straggler_sigma: float = 0.0,

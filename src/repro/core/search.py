@@ -1,14 +1,16 @@
 """Use-case: automatic hybrid-parallel strategy search (paper §6).
 
-Compatibility surface over :mod:`repro.search` — the subsystem that
-adds a shared profile cache, dominance pruning, and multi-cluster
-Pareto search. ``grid_search`` keeps the seed signature and behavior
-(every candidate fully simulated, one provider, full sorted ranking
-with OOM entries included) so existing callers and the cached-vs-naive
-cross-check tests keep working.
+DEPRECATED compatibility surface over :mod:`repro.search` — the
+subsystem that adds a shared profile cache, dominance pruning,
+mega-batch vectorized scoring and multi-cluster Pareto search.
+``grid_search`` keeps the seed signature and behavior (every candidate
+fully simulated, one provider, full sorted ranking with OOM entries
+included) but emits a :class:`DeprecationWarning`: new code should
+drive :class:`repro.search.SearchEngine` directly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional, Sequence
 
 from repro.configs.base import ArchConfig
@@ -27,6 +29,11 @@ def grid_search(cfg: ArchConfig, n_devices: int, global_batch: int,
                 microbatches: Optional[Sequence[int]] = None,
                 schedules: Sequence[str] = ("1f1b",),
                 check_memory: bool = False) -> List[SearchEntry]:
+    """Deprecated: use ``repro.search.SearchEngine(...).search(...)``."""
+    warnings.warn(
+        "repro.core.search.grid_search is deprecated; use "
+        "repro.search.SearchEngine(cfg, ...).search(...)",
+        DeprecationWarning, stacklevel=2)
     provider = provider or AnalyticalProvider(V5E_POD)
     engine = SearchEngine(cfg, cache=ProfileCache.from_provider(provider),
                           prune=False, check_memory=check_memory)

@@ -1,18 +1,25 @@
 """DistSim top-level API (paper Fig. 6).
 
     sim = DistSim(cfg, strategy, global_batch=16, seq=512)
-    result = sim.predict()          # deduped-event timeline (the model)
-    actual = sim.replay(seed=0)     # discrete-event oracle ("actual run")
+    pred = sim.simulate()                 # the model: zero-noise predict
+    reps = sim.simulate(seeds=(0, 1, 2))  # discrete-event replay oracle
 
-``predict`` uses each unique event's profiled mean once — the paper's
-construction. ``replay`` executes every per-device event instance with
-profiling jitter, straggler and clock effects — our stand-in for the real
-16-GPU cluster (see DESIGN.md §2).
+One entry point: :meth:`DistSim.simulate` returns a uniform
+:class:`SimBatch` — the predict lane when ``seeds is None`` (the
+paper's construction: each unique event's profiled mean used once), a
+batched replay when seeds are given (every per-device event instance
+with profiling jitter, straggler and clock effects — our stand-in for
+the real 16-GPU cluster, see DESIGN.md §2). The historical five-method
+surface (``predict``/``replay``/``predict_batched``/``replay_batched``/
+``predict_and_replay``) remains as thin deprecated wrappers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import warnings
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.costmodel import V5E_POD
@@ -35,6 +42,101 @@ class SimResult:
     bubble_fraction: float
 
 
+def _to_result(tl: Timeline, global_batch: int, seq: int) -> SimResult:
+    bt = tl.batch_time
+    util = tl.utilization()
+    return SimResult(
+        timeline=tl,
+        batch_time=bt,
+        throughput_iters=1.0 / bt if bt else 0.0,
+        throughput_tokens=global_batch * seq / bt if bt else 0,
+        utilization=util,
+        bubble_fraction=tl.bubble_fraction(util),
+    )
+
+
+class SimBatch:
+    """Uniform result of :meth:`DistSim.simulate`.
+
+    Wraps the engine's array-native :class:`TimelineBatch` (one lane
+    per seed; a single zero-noise lane for predict) plus the sim's
+    workload scalars, so both modes expose the same accessors:
+
+    * arrays across lanes: :attr:`batch_times`,
+      :meth:`throughput_iters`, :meth:`bubble_fraction`,
+      :meth:`utilization`;
+    * per-lane views: :meth:`timeline`, :meth:`result`,
+      :meth:`results` (lazy — no ``Activity`` list is built until a
+      timeline is inspected);
+    * scalar convenience for the single-lane case:
+      :attr:`batch_time` (raises on multi-seed batches rather than
+      silently picking a lane).
+    """
+
+    def __init__(self, batch: TimelineBatch, global_batch: int, seq: int,
+                 mode: str):
+        self.batch = batch
+        self.global_batch = global_batch
+        self.seq = seq
+        self.mode = mode                       # "predict" | "replay"
+
+    def __len__(self) -> int:
+        return len(self.batch)
+
+    def __repr__(self) -> str:
+        return (f"SimBatch(mode={self.mode!r}, lanes={len(self)}, "
+                f"seeds={self.seeds})")
+
+    @property
+    def seeds(self) -> List[Optional[int]]:
+        return list(self.batch.seeds)
+
+    @property
+    def batch_times(self) -> np.ndarray:
+        return self.batch.batch_times
+
+    @property
+    def batch_time(self) -> float:
+        """The single lane's batch time; ambiguous (and an error) when
+        the batch holds several seeds."""
+        if len(self) != 1:
+            raise ValueError(
+                f"batch_time is ambiguous on a {len(self)}-lane "
+                f"SimBatch; use .batch_times or .result(i)")
+        return float(self.batch.batch_times[0])
+
+    def throughput_iters(self) -> np.ndarray:
+        bt = self.batch.batch_times
+        return np.where(bt > 0, np.divide(1.0, bt, where=bt > 0), 0.0)
+
+    def throughput_tokens(self) -> np.ndarray:
+        return self.throughput_iters() * (self.global_batch * self.seq)
+
+    def utilization(self) -> np.ndarray:
+        """(lanes, n_devices) busy fractions."""
+        return self.batch.utilization()
+
+    def bubble_fraction(self) -> np.ndarray:
+        return self.batch.bubble_fraction()
+
+    def timeline(self, i: int = 0) -> Timeline:
+        return self.batch.timeline(i)
+
+    def result(self, i: int = 0) -> SimResult:
+        """Lane ``i`` as the classic :class:`SimResult`."""
+        return _to_result(self.batch.timeline(i), self.global_batch,
+                          self.seq)
+
+    def results(self) -> List[SimResult]:
+        return [self.result(i) for i in range(len(self))]
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"DistSim.{old}() is deprecated; use DistSim.{new}",
+        DeprecationWarning, stacklevel=3)
+
+
 class DistSim:
     def __init__(self, cfg: ArchConfig, strategy: Strategy,
                  global_batch: int, seq: int,
@@ -52,67 +154,90 @@ class DistSim:
                 f"global_batch {global_batch} not divisible by "
                 f"dp*microbatches = {strategy.dp * strategy.microbatches}")
 
-    # ---- the performance model ----
-    def predict(self, positions: Optional[List[Stage]] = None) -> SimResult:
-        return self._result(self.engine(positions).run())
+    # ---- the one simulation surface ----
+    def simulate(self, seeds: Union[int, Sequence[int], None] = None,
+                 jitter_sigma: float = 0.025,
+                 straggler_sigma: float = 0.0,
+                 clock_sigma: float = 0.0,
+                 positions: Optional[List[Stage]] = None) -> SimBatch:
+        """Run the model once, uniformly.
 
-    # ---- the "actual run" oracle ----
+        ``seeds=None`` (default) is the performance model: one
+        zero-noise predict lane (the sigma arguments are ignored —
+        predict is deterministic by construction). An int or sequence
+        of ints replays the discrete-event oracle once per seed, all
+        lanes evaluated in one vectorized pass, bit-identical per seed
+        to the historical sequential ``replay(seed=s)`` calls.
+        """
+        engine = self.engine(positions)
+        if seeds is None:
+            return SimBatch(engine.run_batched(None), self.global_batch,
+                            self.seq, "predict")
+        if isinstance(seeds, (int, np.integer)):
+            seeds = [int(seeds)]
+        batch = engine.run_batched(
+            list(seeds), jitter_sigma=jitter_sigma,
+            straggler_sigma=straggler_sigma, clock_sigma=clock_sigma)
+        return SimBatch(batch, self.global_batch, self.seq, "replay")
+
+    # ---- deprecated 5-method surface (thin delegating wrappers) ----
+    def predict(self, positions: Optional[List[Stage]] = None) -> SimResult:
+        """Deprecated: use ``simulate(positions=...).result()``."""
+        _deprecated("predict", "simulate(positions=...).result()")
+        return self.simulate(positions=positions).result()
+
     def replay(self, seed: int = 0, jitter_sigma: float = 0.025,
                straggler_sigma: float = 0.0,
                clock_sigma: float = 0.0,
                positions: Optional[List[Stage]] = None) -> SimResult:
-        tl = self.engine(positions).run(jitter_sigma=jitter_sigma,
-                                        straggler_sigma=straggler_sigma,
-                                        clock_sigma=clock_sigma, seed=seed)
-        return self._result(tl)
+        """Deprecated: use ``simulate(seeds=seed, ...).result()``."""
+        _deprecated("replay", "simulate(seeds=..., ...).result()")
+        return self.simulate(
+            seeds=seed, jitter_sigma=jitter_sigma,
+            straggler_sigma=straggler_sigma, clock_sigma=clock_sigma,
+            positions=positions).result()
 
-    # ---- batched array-native paths (repro.validate hot loop) ----
     def predict_batched(self, positions: Optional[List[Stage]] = None
                         ) -> TimelineBatch:
-        """The zero-noise prediction as a single-lane TimelineBatch —
-        same numbers as ``predict()``, but with the per-task arrays the
-        array-native validation metrics consume directly."""
-        return self.engine(positions).run_batched(None)
+        """Deprecated: use ``simulate(positions=...).batch``."""
+        _deprecated("predict_batched", "simulate(positions=...).batch")
+        return self.simulate(positions=positions).batch
 
     def replay_batched(self, seeds, jitter_sigma: float = 0.025,
                        straggler_sigma: float = 0.0,
                        clock_sigma: float = 0.0,
                        positions: Optional[List[Stage]] = None
                        ) -> TimelineBatch:
-        """All seeds' replay oracles in one vectorized pass —
-        bit-identical per seed to sequential ``replay(seed=s)`` calls
-        (asserted in ``tests/test_engine.py``), without materializing a
-        single ``Activity``."""
-        return self.engine(positions).run_batched(
-            seeds, jitter_sigma=jitter_sigma,
-            straggler_sigma=straggler_sigma, clock_sigma=clock_sigma)
+        """Deprecated: use ``simulate(seeds=..., ...).batch``."""
+        _deprecated("replay_batched", "simulate(seeds=..., ...).batch")
+        return self.simulate(
+            seeds=list(seeds), jitter_sigma=jitter_sigma,
+            straggler_sigma=straggler_sigma, clock_sigma=clock_sigma,
+            positions=positions).batch
 
-    # ---- conformance hook (repro.validate) ----
     def predict_and_replay(self, seeds=(0,), jitter_sigma: float = 0.025,
                            straggler_sigma: float = 0.0,
                            clock_sigma: float = 0.0, batched: bool = True):
-        """One prediction plus a replay per seed, all sharing a single
-        event-flow engine (one positions build, one event profile) —
-        the per-cell unit of the accuracy sweep.
-
-        With ``batched=True`` (the default) the replays come from one
-        ``run_batched`` pass and the returned ``SimResult`` timelines
-        are lazy per-lane views; ``batched=False`` keeps the sequential
-        one-``run()``-per-seed oracle (the differential baseline).
-        Returns ``(pred, [replay_0, ...])``."""
+        """Deprecated: call ``simulate()`` twice (predict lane + replay
+        lanes); for the sequential differential baseline drive
+        ``engine().run(seed=...)`` directly."""
+        _deprecated("predict_and_replay",
+                    "simulate() / simulate(seeds=...)")
         engine = self.engine()
-        pred = self._result(engine.run())
+        pred = _to_result(engine.run(), self.global_batch, self.seq)
         if batched:
-            batch = engine.run_batched(seeds, jitter_sigma=jitter_sigma,
+            batch = engine.run_batched(list(seeds),
+                                       jitter_sigma=jitter_sigma,
                                        straggler_sigma=straggler_sigma,
                                        clock_sigma=clock_sigma)
-            replays = [self._result(batch.timeline(i))
-                       for i in range(len(batch))]
+            replays = [_to_result(batch.timeline(i), self.global_batch,
+                                  self.seq) for i in range(len(batch))]
         else:
-            replays = [self._result(engine.run(
+            replays = [_to_result(engine.run(
                 jitter_sigma=jitter_sigma,
                 straggler_sigma=straggler_sigma,
-                clock_sigma=clock_sigma, seed=s)) for s in seeds]
+                clock_sigma=clock_sigma, seed=s), self.global_batch,
+                self.seq) for s in seeds]
         return pred, replays
 
     # ---- search-engine hooks ----
@@ -122,14 +247,14 @@ class DistSim:
 
     def positions(self) -> List[Stage]:
         """Pipeline positions (pp*vpp stages) with composed fwd/bwd
-        events — precompute once, pass to predict()/replay() and the
-        search pruner so candidates don't rebuild the model graph."""
+        events — precompute once, pass to simulate() and the search
+        pruner so candidates don't rebuild the model graph."""
         return build_positions(self.cfg, self.strategy, self.microbatch(),
                                self.seq, self.provider.cluster)
 
     def engine(self, positions: Optional[List[Stage]] = None
                ) -> EventFlowEngine:
-        """Event-flow engine for this sim. Reused across predict/replay
+        """Event-flow engine for this sim. Reused across simulate()
         calls (one slot for the default positions build, one keyed on
         the caller's positions) so the per-strategy schedule +
         event-mean precomputation runs once per positions set.
@@ -157,7 +282,7 @@ class DistSim:
     def use_engine(self, engine: EventFlowEngine) -> None:
         """Adopt a prebuilt default engine (the validate sweep's
         :class:`~repro.validate.build_cache.BuildCache` hands sims
-        cached engines so per-cell predict/replay skips the build)."""
+        cached engines so per-cell simulate() skips the build)."""
         if engine.provider is not self.provider:
             raise ValueError("engine was built against a different "
                              "provider than this sim's")
@@ -167,16 +292,7 @@ class DistSim:
         return engine.cache_version != self.provider.cache_version
 
     def _result(self, tl: Timeline) -> SimResult:
-        bt = tl.batch_time
-        util = tl.utilization()
-        return SimResult(
-            timeline=tl,
-            batch_time=bt,
-            throughput_iters=1.0 / bt if bt else 0.0,
-            throughput_tokens=self.global_batch * self.seq / bt if bt else 0,
-            utilization=util,
-            bubble_fraction=tl.bubble_fraction(util),
-        )
+        return _to_result(tl, self.global_batch, self.seq)
 
     # ---- Table 3 accounting ----
     def profiling_report(self) -> Dict[str, float]:

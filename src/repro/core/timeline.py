@@ -88,7 +88,7 @@ class LazyTimeline(Timeline):
     per-device busy time) directly from its per-device arrays, so the
     O(devices x tasks) Python ``Activity`` construction is deferred
     until something actually iterates the activities (per-activity
-    error metrics, trace export). ``DistSim.predict()`` on a
+    error metrics, trace export). ``DistSim.simulate()`` on a
     4096-device strategy never pays it.
 
     ``LazyTimeline.materializations`` counts every deferred build that

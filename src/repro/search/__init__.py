@@ -7,8 +7,8 @@ The paper's §6 use-case as a subsystem:
     result = engine.search(n_devices=64, global_batch=64, seq=512)
     print(format_report(search_report(result)))
 
-``repro.core.search.grid_search`` remains as the naive-compatible
-wrapper over this engine.
+``repro.core.search.grid_search`` remains as a deprecated
+naive-compatible wrapper over this engine.
 """
 from repro.search.cache import ProfileCache
 from repro.search.engine import (SearchEngine, SearchEntry, SearchResult,

@@ -25,6 +25,7 @@ class ProfileCache:
 
     def __init__(self, providers: Mapping[str, Provider]):
         self.providers: Dict[str, Provider] = dict(providers)
+        self._build_caches: Dict[str, object] = {}
 
     @classmethod
     def for_clusters(cls, clusters: Iterable[ClusterSpec],
@@ -38,6 +39,20 @@ class ProfileCache:
 
     def provider(self, cluster: ClusterSpec) -> Provider:
         return self.providers[cluster.name]
+
+    def build_cache(self, cluster: ClusterSpec):
+        """Per-cluster :class:`repro.validate.build_cache.BuildCache`
+        bound to that cluster's provider — the positions/build/engine
+        dedup layer the mega-batch search path compiles from. Persists
+        with this ProfileCache, so repeat searches reuse engines (and
+        profile nothing). Imported lazily: repro.validate pulls in the
+        sweep stack, which search-only callers don't need."""
+        bc = self._build_caches.get(cluster.name)
+        if bc is None:
+            from repro.validate.build_cache import BuildCache
+            bc = BuildCache(self.provider(cluster))
+            self._build_caches[cluster.name] = bc
+        return bc
 
     @property
     def clusters(self) -> list:

@@ -13,12 +13,23 @@ unique-event observation to the *search loop*:
   batch time are pruned before full timeline construction;
 * a list of ``ClusterSpec`` targets yields per-cluster rankings plus a
   cross-cluster Pareto frontier over (batch_time, HBM headroom,
-  profiling cost).
+  profiling cost);
+* with ``megabatch=True`` (the default when the cache is shared) the
+  grid's surviving candidates are scored by ONE
+  :class:`repro.core.megabatch.MegaBatch` array call per cluster
+  instead of a per-cell Python predict: engines come from the
+  cluster's :class:`~repro.validate.build_cache.BuildCache` (shared
+  positions/builds across schedule variants), the memory mask is an
+  array op, and bound-pruning decisions are replayed in grid order
+  over the vectorized batch times — entries, rankings and batch times
+  are bit-identical to the per-cell path (differential oracle in
+  ``tests/test_search_engine.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.configs.base import ArchConfig
@@ -58,6 +69,7 @@ class SearchStats:
     provider_evaluations: int = 0   # real cost-model evaluations
     cache_hits: int = 0
     wall_time_s: float = 0.0
+    megabatch_lanes: int = 0        # candidates scored via array calls
 
     @property
     def candidates_per_s(self) -> float:
@@ -71,6 +83,10 @@ class SearchResult:
     by_cluster: Dict[str, List[SearchEntry]]
     pareto: List[SearchEntry]
     stats: SearchStats
+    #: full specs of the searched clusters (serialized uniformly in
+    #: search_report via ClusterSpec.to_dict, not by registry name)
+    cluster_specs: Dict[str, ClusterSpec] = \
+        dataclasses.field(default_factory=dict)
 
     def ranking(self, cluster: Optional[str] = None) -> List[SearchEntry]:
         """Fully-simulated feasible entries, fastest first (Table 2)."""
@@ -107,7 +123,9 @@ class SearchEngine:
                  cache: Optional[ProfileCache] = None,
                  share_cache: bool = True,
                  prune: bool = True,
-                 check_memory: bool = True):
+                 check_memory: bool = True,
+                 megabatch: bool = True,
+                 megabatch_backend: str = "auto"):
         self.cfg = cfg
         if cache is not None:
             self.clusters = cache.clusters
@@ -124,6 +142,16 @@ class SearchEngine:
         self.cache = cache if cache is not None else (
             ProfileCache.for_clusters(self.clusters, provider_factory)
             if share_cache else None)
+        # the mega-batch path compiles engines out of the shared
+        # BuildCache; without a shared cache it degrades to the naive
+        # per-candidate loop (which is exactly what share_cache=False
+        # exists to benchmark)
+        self.megabatch = bool(megabatch and self.share_cache)
+        self.megabatch_backend = megabatch_backend
+        # compiled MegaBatch programs, keyed by engine identity — the
+        # BuildCache returns the same engine objects on repeat searches,
+        # so a warm search skips compilation and goes straight to eval
+        self._megabatch_programs: "OrderedDict" = OrderedDict()
 
     def _provider(self, cluster: ClusterSpec) -> Provider:
         if self.share_cache:
@@ -141,8 +169,10 @@ class SearchEngine:
         grid = enumerate_candidates(n_devices, global_batch, microbatches,
                                     schedules, zero1_options)
         by_cluster: Dict[str, List[SearchEntry]] = {}
+        search_cluster = (self._search_cluster_megabatch if self.megabatch
+                          else self._search_cluster)
         for cluster in self.clusters:
-            by_cluster[cluster.name] = self._search_cluster(
+            by_cluster[cluster.name] = search_cluster(
                 cluster, grid, global_batch, seq, stats)
 
         entries = sorted((e for es in by_cluster.values() for e in es),
@@ -155,7 +185,9 @@ class SearchEngine:
         stats.wall_time_s = time.perf_counter() - t0
         pareto = pareto_frontier(
             [e for e in entries if e.feasible and not e.pruned])
-        return SearchResult(entries, by_cluster, pareto, stats)
+        return SearchResult(entries, by_cluster, pareto, stats,
+                            cluster_specs={c.name: c
+                                           for c in self.clusters})
 
     def _search_cluster(self, cluster: ClusterSpec, grid: List[Candidate],
                         global_batch: int, seq: int,
@@ -196,18 +228,106 @@ class SearchEngine:
                         stats.cache_hits += provider.stats.hits
                     continue
 
-            res = sim.predict(positions=positions)
+            res = sim.simulate(positions=positions)
             stats.evaluated += 1
+            bt = res.batch_time
             ptime = sum(provider.cached_time(e)
                         for e in stage_event_set(positions))
             entries.append(SearchEntry(
-                strat, res.batch_time, res.throughput_iters,
-                res.bubble_fraction, True,
+                strat, bt, 1.0 / bt if bt else 0.0,
+                float(res.bubble_fraction()[0]), True,
                 cluster=cluster.name, mem_bytes=mem,
                 hbm_headroom=headroom, profile_time_s=ptime))
-            if best_bt is None or res.batch_time < best_bt:
-                best_bt = res.batch_time
+            if best_bt is None or bt < best_bt:
+                best_bt = bt
             if not self.share_cache:
                 stats.provider_evaluations += provider.stats.evaluations
                 stats.cache_hits += provider.stats.hits
+        return entries
+
+    def _search_cluster_megabatch(self, cluster: ClusterSpec,
+                                  grid: List[Candidate],
+                                  global_batch: int, seq: int,
+                                  stats: SearchStats) -> List[SearchEntry]:
+        """Array-call variant of :meth:`_search_cluster`.
+
+        Phase 1 applies the memory mask and compiles every surviving
+        candidate's engine from the cluster's BuildCache; phase 2 is a
+        single :class:`~repro.core.megabatch.MegaBatch` evaluation;
+        phase 3 replays the bound-pruning decisions in grid order over
+        the vectorized batch times. Because the mega-batch times are
+        bit-identical to per-engine predicts, the sequential prune
+        trajectory (lower bound vs best-so-far) — and hence every
+        entry — reproduces the per-cell path exactly.
+        """
+        from repro.core.megabatch import MegaBatch
+
+        provider = self.cache.provider(cluster)
+        bcache = self.cache.build_cache(cluster)
+        budget = cluster.chip.hbm_bytes * HBM_BUDGET
+
+        rows = []        # (cand, mem, headroom, lane | None, lb | None)
+        engines = []
+        for cand in grid:
+            stats.candidates += 1
+            strat = cand.strategy
+            mem = estimate_memory(self.cfg, strat, cand.microbatch, seq)
+            headroom = budget - mem
+            if self.check_memory and headroom <= 0:
+                stats.pruned_memory += 1
+                rows.append((cand, mem, headroom, None, None))
+                continue
+            eng = bcache.engine_for_cfg(self.cfg, strat, global_batch,
+                                        seq)
+            lb = (work_lower_bound(eng.build.stages, strat, provider)
+                  if self.prune else None)
+            rows.append((cand, mem, headroom, len(engines), lb))
+            engines.append(eng)
+
+        times = None
+        bubbles = None
+        if engines:
+            # engines come from the BuildCache, so the identity tuple is
+            # stable across repeat searches — a warm search reuses the
+            # compiled array program and pays only the eval
+            key = (cluster.name, tuple(id(e) for e in engines))
+            mb = self._megabatch_programs.get(key)
+            if mb is None:
+                mb = MegaBatch(engines)
+                self._megabatch_programs[key] = mb
+                while len(self._megabatch_programs) > 8:
+                    self._megabatch_programs.popitem(last=False)
+            pred = mb.predict(self.megabatch_backend)
+            times, bubbles = pred.batch_times, pred.bubble_fractions
+            stats.megabatch_lanes += len(engines)
+
+        entries: List[SearchEntry] = []
+        best_bt: Optional[float] = None
+        for cand, mem, headroom, lane, lb in rows:
+            strat = cand.strategy
+            if lane is None:
+                entries.append(SearchEntry(
+                    strat, float("inf"), 0.0, 1.0, False, "OOM",
+                    cluster=cluster.name, mem_bytes=mem,
+                    hbm_headroom=headroom))
+                continue
+            if self.prune and best_bt is not None and lb >= best_bt:
+                stats.pruned_bound += 1
+                entries.append(SearchEntry(
+                    strat, lb, 0.0, 0.0, False, "bound", pruned=True,
+                    cluster=cluster.name, mem_bytes=mem,
+                    hbm_headroom=headroom))
+                continue
+            bt = float(times[lane])
+            stats.evaluated += 1
+            ptime = sum(provider.cached_time(e)
+                        for e in stage_event_set(
+                            engines[lane].build.stages))
+            entries.append(SearchEntry(
+                strat, bt, 1.0 / bt if bt else 0.0,
+                float(bubbles[lane]), True,
+                cluster=cluster.name, mem_bytes=mem,
+                hbm_headroom=headroom, profile_time_s=ptime))
+            if best_bt is None or bt < best_bt:
+                best_bt = bt
         return entries

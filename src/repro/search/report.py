@@ -64,6 +64,11 @@ def search_report(result: SearchResult, top: int = 10,
         "pareto": [_row(i + 1, e)
                    for i, e in enumerate(result.pareto)],
         "clusters": sorted(result.by_cluster),
+        # full specs (ClusterSpec.to_dict round-trip), not names only —
+        # a report over a custom cluster stays self-describing
+        "cluster_specs": {name: spec.to_dict()
+                          for name, spec in
+                          sorted(result.cluster_specs.items())},
         "search": {
             "candidates": st.candidates,
             "evaluated": st.evaluated,
@@ -71,6 +76,7 @@ def search_report(result: SearchResult, top: int = 10,
             "pruned_bound": st.pruned_bound,
             "provider_evaluations": st.provider_evaluations,
             "cache_hits": st.cache_hits,
+            "megabatch_lanes": st.megabatch_lanes,
             "wall_time_s": st.wall_time_s,
             "candidates_per_s": st.candidates_per_s,
         },

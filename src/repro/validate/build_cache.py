@@ -32,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-from repro.configs.base import get_config, smoke_config
+from repro.configs.base import ArchConfig, get_config, smoke_config
 from repro.core.engine import EngineBuild, EventFlowEngine
 from repro.core.events import Stage, Strategy
 from repro.core.hierarchy import build_positions
@@ -109,55 +109,79 @@ class BuildCache:
     def _microbatch(strat: Strategy, global_batch: int) -> int:
         return max(1, global_batch // (strat.dp * strat.microbatches))
 
-    def positions(self, arch: str, smoke: bool, strat: Strategy,
-                  microbatch: int, seq: int) -> List[Stage]:
+    @staticmethod
+    def _resolve(arch: str, smoke: bool) -> ArchConfig:
+        cfg = get_config(arch)
+        return smoke_config(cfg) if smoke else cfg
+
+    # ---- cfg-object-keyed surface (search engine / mega-batch) ----
+    # ArchConfig is a frozen dataclass, so the config VALUE is the key:
+    # callers that already hold a config (SearchEngine) skip the
+    # registry entirely, and two arch names that resolve to an equal
+    # config collapse to one entry.
+
+    def positions_for(self, cfg: ArchConfig, strat: Strategy,
+                      microbatch: int, seq: int) -> List[Stage]:
         self._check_version()
-        key = (arch, smoke, strat.mp, strat.pp, strat.vpp, microbatch,
-               seq)
+        key = (cfg, strat.mp, strat.pp, strat.vpp, microbatch, seq)
         hit = self._positions.get(key)
         if hit is not None:
             self.stats.positions_hits += 1
             return hit
         self.stats.positions_misses += 1
-        cfg = get_config(arch)
-        if smoke:
-            cfg = smoke_config(cfg)
         pos = build_positions(cfg, strat, microbatch, seq,
                               self.provider.cluster)
         self._positions[key] = pos
         return pos
 
-    def build(self, arch: str, smoke: bool, strat: Strategy,
-              microbatch: int, seq: int) -> EngineBuild:
+    def build_for(self, cfg: ArchConfig, strat: Strategy,
+                  microbatch: int, seq: int) -> EngineBuild:
         self._check_version()
-        key = (arch, smoke, _strip_schedule(strat), microbatch, seq)
+        key = (cfg, _strip_schedule(strat), microbatch, seq)
         hit = self._builds.get(key)
         if hit is not None:
             self.stats.build_hits += 1
             return hit
         self.stats.build_misses += 1
-        pos = self.positions(arch, smoke, strat, microbatch, seq)
+        pos = self.positions_for(cfg, strat, microbatch, seq)
         # with_dp_sync=None: precompute sync means whenever dp > 1 so
         # pipedream and the syncing schedules share one build
         build = EngineBuild(pos, strat, self.provider, with_dp_sync=None)
         self._builds[key] = build
         return build
 
-    def engine(self, arch: str, smoke: bool, strat: Strategy,
-               global_batch: int, seq: int) -> EventFlowEngine:
+    def engine_for_cfg(self, cfg: ArchConfig, strat: Strategy,
+                       global_batch: int, seq: int) -> EventFlowEngine:
         self._check_version()
         micro = self._microbatch(strat, global_batch)
-        key = (arch, smoke, strat, micro, seq)
+        key = (cfg, strat, micro, seq)
         hit = self._engines.get(key)
         if hit is not None:
             self.stats.engine_hits += 1
             return hit
         self.stats.engine_misses += 1
-        build = self.build(arch, smoke, strat, micro, seq)
+        build = self.build_for(cfg, strat, micro, seq)
         eng = EventFlowEngine(build.stages, strat, self.provider,
                               build=build)
         self._engines[key] = eng
         return eng
+
+    # ---- registry-name surface (validation sweep cells) ----
+
+    def positions(self, arch: str, smoke: bool, strat: Strategy,
+                  microbatch: int, seq: int) -> List[Stage]:
+        return self.positions_for(self._resolve(arch, smoke), strat,
+                                  microbatch, seq)
+
+    def build(self, arch: str, smoke: bool, strat: Strategy,
+              microbatch: int, seq: int) -> EngineBuild:
+        return self.build_for(self._resolve(arch, smoke), strat,
+                              microbatch, seq)
+
+    def engine(self, arch: str, smoke: bool, strat: Strategy,
+               global_batch: int, seq: int) -> EventFlowEngine:
+        return self.engine_for_cfg(self._resolve(arch, smoke), strat,
+                                   global_batch, seq)
 
     def engine_for(self, cell) -> EventFlowEngine:
         """Engine for a :class:`repro.validate.sweep.ValidationCell`."""

@@ -63,7 +63,7 @@ def compare_batch(pred: TimelineBatch, actual: TimelineBatch
                   ) -> List[CellMetrics]:
     """Array-native metrics for every replay lane of ``actual`` against
     ``pred``, which must be a single zero-noise lane
-    (``DistSim.predict_batched()``; enforced — a noisy or multi-lane
+    (``DistSim.simulate().batch``; enforced — a noisy or multi-lane
     prediction batch would silently be misread as replica-0 times).
 
     Both batches must come from the same engine (same task structure):
@@ -77,7 +77,7 @@ def compare_batch(pred: TimelineBatch, actual: TimelineBatch
     if len(pred) != 1 or pred.n_sim != 1:
         raise ValueError(
             f"compare_batch needs a single-lane zero-noise prediction "
-            f"batch (predict_batched()), got S={len(pred)}, "
+            f"batch (simulate().batch), got S={len(pred)}, "
             f"n_sim={pred.n_sim}")
     S = len(actual)
     dp, mp, pp = actual.dp, actual.mp, actual.pp

@@ -210,9 +210,10 @@ def run_cell(cell: ValidationCell, provider: Provider,
     structure — e.g. the same pair under another schedule — skips the
     model-graph + event-mean rebuild; results are bit-identical either
     way. ``batched=False`` keeps the historical path — S sequential
-    ``replay()`` calls compared via materialized activity lists — as
-    the differential baseline for ``tests/test_validation.py`` and the
-    seed-scaling section of ``benchmarks/bench_timeline.py``.
+    ``engine.run(seed=s)`` replays compared via materialized activity
+    lists — as the differential baseline for
+    ``tests/test_validation.py`` and the seed-scaling section of
+    ``benchmarks/bench_timeline.py``.
     """
     thresholds = thresholds or Thresholds()
     sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
@@ -220,18 +221,23 @@ def run_cell(cell: ValidationCell, provider: Provider,
     if cache is not None:
         sim.use_engine(cache.engine_for(cell))
     if batched:
-        pred_b = sim.predict_batched()
-        rep_b = sim.replay_batched(seeds, jitter_sigma=jitter_sigma)
+        pred_b = sim.simulate().batch
+        rep_b = sim.simulate(seeds=seeds,
+                             jitter_sigma=jitter_sigma).batch
         per_seed = compare_batch(pred_b, rep_b)
         pred_bt = float(pred_b.batch_times[0])
         replay_bts = [float(t) for t in rep_b.batch_times]
     else:
-        pred, replays = sim.predict_and_replay(
-            seeds=seeds, jitter_sigma=jitter_sigma, batched=False)
-        per_seed = [compare_timelines(pred.timeline, r.timeline)
-                    for r in replays]
-        pred_bt = pred.batch_time
-        replay_bts = [r.batch_time for r in replays]
+        # sequential differential baseline: one engine, one run() per
+        # seed, activity-list comparison — deliberately NOT routed
+        # through simulate() so it stays an independent oracle
+        engine = sim.engine()
+        pred_tl = engine.run()
+        replay_tls = [engine.run(jitter_sigma=jitter_sigma, seed=s)
+                      for s in seeds]
+        per_seed = [compare_timelines(pred_tl, tl) for tl in replay_tls]
+        pred_bt = pred_tl.batch_time
+        replay_bts = [tl.batch_time for tl in replay_tls]
     metrics = aggregate(per_seed)
     return CellResult(
         cell=cell, metrics=metrics, per_seed=per_seed, seeds=list(seeds),

@@ -1,4 +1,5 @@
 """DistSim core behaviour tests (paper §3-§5)."""
+import numpy as np
 import pytest
 
 from repro.configs.base import get_config
@@ -54,8 +55,8 @@ def test_predict_matches_replay_batch_time(provider):
     for mp, pp, dp, m in [(1, 1, 4, 1), (1, 2, 2, 4), (2, 2, 1, 4),
                           (2, 2, 4, 4), (1, 4, 1, 8)]:
         sim = make_sim(provider, mp, pp, dp, m)
-        pred = sim.predict()
-        act = sim.replay(seed=0)
+        pred = sim.simulate().result()
+        act = sim.simulate(seeds=0).result()
         err = batch_time_error(pred.timeline, act.timeline)
         assert err < 0.04, f"{mp}M{pp}P{dp}D err={err:.3f}"
 
@@ -63,8 +64,8 @@ def test_predict_matches_replay_batch_time(provider):
 def test_predict_matches_replay_activity(provider):
     """§5.3: <5% per-device activity error."""
     sim = make_sim(provider, 2, 2, 2, 4)
-    pred = sim.predict()
-    act = sim.replay(seed=3)
+    pred = sim.simulate().result()
+    act = sim.simulate(seeds=3).result()
     errs = activity_error(pred.timeline, act.timeline)
     assert errs and max(errs.values()) < 0.05
 
@@ -72,7 +73,7 @@ def test_predict_matches_replay_activity(provider):
 def test_mp_devices_identical(provider):
     """§5.4 observation: MP rank pairs show the same activity."""
     sim = make_sim(provider, mp=2, pp=2, dp=1, m=4)
-    tl = sim.predict().timeline
+    tl = sim.simulate().result().timeline
     by_dev = tl.by_device()
     for d in range(0, tl.n_devices, 2):
         a = [(x.name, round(x.start, 9)) for x in by_dev[d]
@@ -86,21 +87,21 @@ def test_more_microbatches_fewer_bubbles(provider):
     frac = []
     for m in (2, 4, 8, 16):
         sim = make_sim(provider, mp=1, pp=4, dp=1, m=m, gb=16)
-        frac.append(sim.predict().bubble_fraction)
+        frac.append(sim.simulate().result().bubble_fraction)
     assert frac[-1] < frac[0]
 
 
 def test_schedule_ordering_1f1b_beats_gpipe(provider):
-    g = make_sim(provider, 1, 4, 1, 8, "gpipe").predict()
-    d = make_sim(provider, 1, 4, 1, 8, "1f1b").predict()
+    g = make_sim(provider, 1, 4, 1, 8, "gpipe").simulate().result()
+    d = make_sim(provider, 1, 4, 1, 8, "1f1b").simulate().result()
     assert d.batch_time <= g.batch_time * 1.02
 
 
 def test_dp_scaling_increases_throughput(provider):
     t1 = DistSim(CFG, Strategy(dp=1, microbatches=1), 8, 512,
-                 provider).predict()
+                 provider).simulate().result()
     t4 = DistSim(CFG, Strategy(dp=4, microbatches=1), 8, 512,
-                 provider).predict()
+                 provider).simulate().result()
     assert t4.batch_time < t1.batch_time
 
 
@@ -124,9 +125,9 @@ def test_invalid_batch_raises(provider):
 
 def test_zero1_changes_sync_events(provider):
     a = DistSim(CFG, Strategy(dp=4, microbatches=1), 16, 512,
-                provider).predict()
+                provider).simulate().result()
     b = DistSim(CFG, Strategy(dp=4, microbatches=1, zero1=True), 16, 512,
-                provider).predict()
+                provider).simulate().result()
     assert abs(a.batch_time - b.batch_time) / a.batch_time < 0.5
     assert a.batch_time != b.batch_time
 
@@ -135,7 +136,7 @@ def test_chrome_trace_export(tmp_path, provider):
     import json
     from repro.core.timeline import to_chrome_trace
     sim = make_sim(provider, 1, 2, 2, 4)
-    tl = sim.predict().timeline
+    tl = sim.simulate().result().timeline
     path = str(tmp_path / "trace.json")
     to_chrome_trace(tl, path)
     data = json.load(open(path))
@@ -148,8 +149,8 @@ def test_pipedream_schedule_no_sync(provider):
     """Async pipeline (paper §7): no DP all-reduce events."""
     s_sync = Strategy(pp=2, dp=2, microbatches=4)
     s_async = Strategy(pp=2, dp=2, microbatches=4, schedule="pipedream")
-    tl_sync = DistSim(CFG, s_sync, 8, 512, provider).predict().timeline
-    tl_async = DistSim(CFG, s_async, 8, 512, provider).predict().timeline
+    tl_sync = DistSim(CFG, s_sync, 8, 512, provider).simulate().result().timeline
+    tl_async = DistSim(CFG, s_async, 8, 512, provider).simulate().result().timeline
     assert any(a.kind == "AR" for a in tl_sync.activities)
     assert not any(a.kind == "AR" for a in tl_async.activities)
     assert tl_async.batch_time <= tl_sync.batch_time
@@ -158,7 +159,57 @@ def test_pipedream_schedule_no_sync(provider):
 def test_grad_compression_whatif(provider):
     """Compression shrinks the DP sync event; DP-bound strategies gain."""
     a = DistSim(CFG, Strategy(dp=8, microbatches=1), 16, 512,
-                provider).predict()
+                provider).simulate().result()
     b = DistSim(CFG, Strategy(dp=8, microbatches=1, grad_compress=0.25),
-                16, 512, provider).predict()
+                16, 512, provider).simulate().result()
     assert b.batch_time < a.batch_time
+
+
+# --------------------------------------------------------------------------
+# one simulate() surface + deprecated wrappers (PR: api_redesign)
+# --------------------------------------------------------------------------
+
+def test_simulate_predict_and_replay_lanes(provider):
+    """simulate() is the whole surface: seeds=None -> zero-noise predict
+    lane; seeds=... -> replay lanes, bit-identical to sequential runs."""
+    sim = make_sim(provider)
+    pred = sim.simulate()
+    assert len(pred) == 1 and pred.seeds == [None]
+    assert pred.batch_time == sim.engine().run().batch_time
+    rep = sim.simulate(seeds=(0, 1, 2))
+    assert len(rep) == 3 and rep.seeds == [0, 1, 2]
+    for i, s in enumerate((0, 1, 2)):
+        tl = sim.engine().run(jitter_sigma=0.025, seed=s)
+        assert float(rep.batch_times[i]) == tl.batch_time
+    # int seeds means one replay lane, not a seed count
+    one = sim.simulate(seeds=1)
+    assert one.seeds == [1]
+    with pytest.raises(ValueError):
+        rep.batch_time                 # ambiguous across 3 lanes
+    assert rep.result(2).batch_time == float(rep.batch_times[2])
+    assert len(rep.results()) == 3
+    assert rep.utilization().shape[0] == 3
+    assert rep.bubble_fraction().shape == (3,)
+
+
+def test_deprecated_wrappers_warn_and_match_simulate(provider):
+    """Each legacy entry point warns once and returns exactly what the
+    simulate() lane it wraps returns."""
+    sim = make_sim(provider)
+    with pytest.warns(DeprecationWarning, match="predict"):
+        pred = sim.predict()
+    assert pred.batch_time == sim.simulate().batch_time
+    with pytest.warns(DeprecationWarning, match="replay"):
+        act = sim.replay(seed=3)
+    assert act.batch_time == sim.simulate(seeds=3).result().batch_time
+    with pytest.warns(DeprecationWarning, match="predict_batched"):
+        pb = sim.predict_batched()
+    assert float(pb.batch_times[0]) == pred.batch_time
+    with pytest.warns(DeprecationWarning, match="replay_batched"):
+        rb = sim.replay_batched((0, 1))
+    ref = sim.simulate(seeds=(0, 1)).batch
+    assert np.array_equal(rb.batch_times, ref.batch_times)
+    with pytest.warns(DeprecationWarning, match="predict_and_replay"):
+        pr, (a0,) = sim.predict_and_replay(seeds=(0,))
+    assert pr.batch_time == pred.batch_time
+    assert a0.batch_time == sim.simulate(seeds=0).result().batch_time

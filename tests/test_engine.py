@@ -40,7 +40,7 @@ def test_predict_bit_identical_to_polling_scheduler(strat):
     drift would be an engine bug, not a replay-oracle bugfix."""
     gb = strat.dp * strat.microbatches * 2
     sim = DistSim(CFG, strat, gb, 128, PROVIDER)
-    new = sim.predict().timeline
+    new = sim.simulate().timeline()
     old = construct_timeline_polling(CFG, strat, gb, 128, PROVIDER)
     assert new.n_devices == old.n_devices
     assert _key(new) == _key(old)
@@ -51,7 +51,7 @@ def test_predict_bit_identical_with_empty_stages():
     cfg = smoke_config(get_config("gpt2_345m"))    # 2 layers
     strat = Strategy(pp=4, microbatches=4)
     sim = DistSim(cfg, strat, 4, 64, PROVIDER)
-    new = sim.predict().timeline
+    new = sim.simulate().timeline()
     old = construct_timeline_polling(cfg, strat, 4, 64, PROVIDER)
     assert _key(new) == _key(old)
 
@@ -70,8 +70,8 @@ def test_clock_skew_constant_per_device():
     run, applied to every activity of that device — not an independent
     draw per activity (that's jitter, and it's already modeled)."""
     sim = _sim()
-    base = sim.replay(seed=7).timeline.by_device()
-    skew = sim.replay(seed=7, clock_sigma=1e-3).timeline.by_device()
+    base = sim.simulate(seeds=7).timeline().by_device()
+    skew = sim.simulate(seeds=7, clock_sigma=1e-3).timeline().by_device()
     offsets = set()
     for dev in base:
         per_dev = {round(a.start - b.start, 12)
@@ -87,7 +87,7 @@ def test_dp_allreduce_synchronizes_replicas():
     """Fix: a blocking all-reduce completes when the slowest participant
     does — every replica of a device slot must exit at the same time."""
     sim = _sim(dp=4)
-    tl = sim.replay(seed=3).timeline
+    tl = sim.simulate(seeds=3).timeline()
     by_stage = {}
     for a in tl.activities:
         if a.kind == "AR":
@@ -103,10 +103,10 @@ def test_ar_end_is_max_of_replica_draws():
     """The common AR end must be start + max over per-replica draws:
     strictly larger than the zero-jitter span for some seed."""
     sim = _sim(dp=4)
-    pred = sim.predict().timeline
+    pred = sim.simulate().timeline()
     pred_span = {a.stage: a.end - a.start for a in pred.activities
                  if a.kind == "AR"}
-    tl = sim.replay(seed=11).timeline
+    tl = sim.simulate(seeds=11).timeline()
     spans = {a.stage: a.end - a.start for a in tl.activities
              if a.kind == "AR"}
     assert any(spans[d] > pred_span[d] for d in spans)
@@ -136,7 +136,7 @@ def test_predict_simulates_single_replica(monkeypatch):
 
 def test_replicas_identical_under_zero_noise():
     sim = _sim(dp=3, mp=1)
-    tl = sim.predict().timeline
+    tl = sim.simulate().timeline()
     pp = 2
     by_dev = tl.by_device()
     ref = [(a.name, a.kind, round(a.start, 12), round(a.end, 12))
@@ -153,17 +153,17 @@ def test_replicas_identical_under_zero_noise():
 
 def test_replay_deterministic_per_seed():
     sim = _sim()
-    a = sim.replay(seed=5).timeline
-    b = sim.replay(seed=5).timeline
+    a = sim.simulate(seeds=5).timeline()
+    b = sim.simulate(seeds=5).timeline()
     assert _key(a) == _key(b)
-    c = sim.replay(seed=6).timeline
+    c = sim.simulate(seeds=6).timeline()
     assert _key(a) != _key(c)
 
 
 def test_zero_noise_replay_equals_predict():
     sim = _sim()
-    pred = sim.predict().timeline
-    rep = sim.replay(seed=0, jitter_sigma=0.0).timeline
+    pred = sim.simulate().timeline()
+    rep = sim.simulate(seeds=0, jitter_sigma=0.0).timeline()
     assert _key(pred) == _key(rep)
 
 
@@ -171,8 +171,8 @@ def test_straggler_only_slows_one_device_everywhere():
     """straggler_sigma scales ALL of a device's event durations by one
     factor >= 1; batch time can only grow."""
     sim = _sim()
-    pred = sim.predict()
-    slow = sim.replay(seed=2, jitter_sigma=0.0, straggler_sigma=0.3)
+    pred = sim.simulate()
+    slow = sim.simulate(seeds=2, jitter_sigma=0.0, straggler_sigma=0.3)
     assert slow.batch_time >= pred.batch_time
 
 
@@ -188,8 +188,8 @@ def test_lazy_stats_match_materialized():
                   Strategy(pp=2, dp=2, microbatches=4,
                            schedule="pipedream")):
         sim = DistSim(CFG, strat, 8, 128, PROVIDER)
-        for tl in (sim.predict().timeline,
-                   sim.replay(seed=1, clock_sigma=1e-4).timeline):
+        for tl in (sim.simulate().timeline(),
+                   sim.simulate(seeds=1, clock_sigma=1e-4).timeline()):
             flat = Timeline(list(tl.activities), n_devices=tl.n_devices)
             assert tl.batch_time == pytest.approx(flat.batch_time,
                                                   rel=0, abs=0)
@@ -203,7 +203,7 @@ def test_lazy_stats_match_materialized():
 
 def test_lazy_timeline_materializes_once():
     sim = _sim()
-    tl = sim.predict().timeline
+    tl = sim.simulate().timeline()
     first = tl.activities
     assert tl.activities is first
 
@@ -213,13 +213,13 @@ def test_engine_cache_custom_positions_do_not_shadow_default():
     calls: they rebuild from the sim's own positions()."""
     from repro.core.hierarchy import build_positions
     sim = _sim()
-    default_bt = sim.predict().batch_time
+    default_bt = sim.simulate().batch_time
     # same pp*vpp stage count, different (smaller) model -> different times
     custom = build_positions(smoke_config(CFG), sim.strategy, 1, 128,
                              PROVIDER.cluster)
-    custom_bt = sim.predict(positions=custom).batch_time
+    custom_bt = sim.simulate(positions=custom).batch_time
     assert custom_bt != default_bt
-    assert sim.predict().batch_time == default_bt
+    assert sim.simulate().batch_time == default_bt
     assert sim.engine() is not sim.engine(custom)
 
 
@@ -312,7 +312,7 @@ def test_batched_stats_match_lane_timelines():
     per-lane LazyTimeline views (which in turn match materialized
     recomputation, covered above)."""
     sim = _sim(dp=2)
-    batch = sim.replay_batched((0, 1), clock_sigma=1e-4)
+    batch = sim.simulate(seeds=(0, 1), clock_sigma=1e-4).batch
     util = batch.utilization()
     bub = batch.bubble_fraction()
     for i in range(len(batch)):
@@ -352,7 +352,7 @@ def test_deadlocked_schedule_raises():
 
 def test_nan_free_timelines():
     sim = _sim(dp=2)
-    for tl in (sim.predict().timeline, sim.replay(seed=0).timeline):
+    for tl in (sim.simulate().timeline(), sim.simulate(seeds=0).timeline()):
         for a in tl.activities:
             assert not math.isnan(a.start) and not math.isnan(a.end)
             assert a.end >= a.start - 1e-12

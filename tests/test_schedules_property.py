@@ -62,7 +62,7 @@ def test_timeline_constructs_without_deadlock(pp, dp, mp, m, schedule):
     gb = dp * m                         # microbatch size 1
     sim = DistSim(CFG, Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
                                 schedule=schedule), gb, 128, PROVIDER)
-    res = sim.predict()
+    res = sim.simulate().result()
     tl = res.timeline
     assert tl.batch_time > 0
     for dev, acts in tl.by_device().items():
@@ -133,6 +133,6 @@ def test_replay_jitter_bounded(m, seed):
     """Replay with 2.5% event jitter stays within ~10% of prediction."""
     sim = DistSim(CFG, Strategy(pp=2, dp=2, microbatches=m), 2 * m, 128,
                   PROVIDER)
-    pred = sim.predict()
-    act = sim.replay(seed=seed)
+    pred = sim.simulate().result()
+    act = sim.simulate(seeds=seed).result()
     assert abs(pred.batch_time - act.batch_time) / act.batch_time < 0.10

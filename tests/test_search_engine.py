@@ -53,7 +53,15 @@ def test_cache_hit_accounting_repeat_search_profiles_nothing():
     assert first.stats.provider_evaluations > 0
     again = eng.search(16, 16, 128, **GRID)
     assert again.stats.provider_evaluations == 0
-    assert again.stats.cache_hits > 0
+    # the mega-batch lane memoizes engines AND the compiled array
+    # program, so a warm repeat search makes no provider queries at all;
+    # the per-cell lane still shows the cache-hit traffic
+    assert again.stats.cache_hits == 0
+    seq = _engine(share_cache=True, megabatch=False)
+    seq.search(16, 16, 128, **GRID)
+    seq_again = seq.search(16, 16, 128, **GRID)
+    assert seq_again.stats.provider_evaluations == 0
+    assert seq_again.stats.cache_hits > 0
     # a new schedule reuses the event universe too (schedules reorder
     # events, they don't create new ones)
     sched = eng.search(16, 16, 128, microbatches=(1, 2, 4, 8),
@@ -69,7 +77,7 @@ def test_work_lower_bound_is_sound():
         sim = DistSim(CFG, cand.strategy, 16, 128, provider)
         positions = sim.positions()
         lb = work_lower_bound(positions, cand.strategy, provider)
-        bt = sim.predict(positions=positions).batch_time
+        bt = sim.simulate(positions=positions).batch_time
         assert lb <= bt * (1 + 1e-9), cand.label()
 
 
@@ -85,7 +93,7 @@ def test_pruning_soundness_no_pruned_candidate_beats_best():
     for e in pruned.entries:
         if e.pruned:
             bt = DistSim(CFG, e.strategy, 16, 128,
-                         provider).predict().batch_time
+                         provider).simulate().batch_time
             assert bt >= best.batch_time * (1 - 1e-9)
             assert bt >= e.batch_time * (1 - 1e-9)   # entry holds a LB
 
@@ -106,7 +114,8 @@ def test_pruning_sound_under_replay_oracle():
         if not e.pruned:
             continue
         sim = DistSim(CFG, e.strategy, 16, 128, provider)
-        pred, (act,) = sim.predict_and_replay(seeds=(0,))
+        pred = sim.simulate().result()
+        act = sim.simulate(seeds=(0,)).result()
         m = compare_timelines(pred.timeline, act.timeline)
         # the oracle itself stays within the validation gate
         assert m.batch_time_error <= thr.batch_time, e.strategy.label()
@@ -154,7 +163,8 @@ def test_search_report_json_and_format():
 
 def test_grid_search_compat_delegates_to_engine():
     provider = AnalyticalProvider(A40_CLUSTER)
-    entries = grid_search(CFG, 16, 16, 128, provider=provider)
+    with pytest.warns(DeprecationWarning, match="grid_search"):
+        entries = grid_search(CFG, 16, 16, 128, provider=provider)
     assert entries == sorted(entries, key=lambda e: e.batch_time)
     assert all(e.feasible and not e.pruned for e in entries)
     best = _engine(share_cache=True).search(16, 16, 128).best()
@@ -183,3 +193,71 @@ def test_profile_cache_snapshot_and_registry():
     cache.provider(A40_CLUSTER).time(
         Event(kind="p2p", name="x", nbytes=1e3))
     assert cache.snapshot()["unique_events"] == 1
+
+
+# --------------------------------------------------------------------------
+# mega-batch vectorized predict (PR: one array call per cluster)
+# --------------------------------------------------------------------------
+
+@pytest.mark.search
+def test_megabatch_bit_identical_on_64_device_grid():
+    """Differential oracle: the compiled array program scores every
+    non-OOM candidate of the 64-device smoke grid (ragged task counts,
+    all four schedules) bit-identically to per-engine run()."""
+    from repro.core.megabatch import MegaBatch
+    from repro.search.space import enumerate_candidates
+
+    grid = dict(microbatches=(1, 2, 4, 8),
+                schedules=("1f1b", "gpipe", "interleaved", "pipedream"))
+    eng = _engine(share_cache=True)
+    cluster = eng.clusters[0]
+    bcache = eng.cache.build_cache(cluster)
+    engines = [bcache.engine_for_cfg(CFG, c.strategy, 64, 128)
+               for c in enumerate_candidates(64, 64, **grid)]
+    assert len(engines) > 100
+    assert len({e.total_tasks for e in engines}) > 3    # ragged
+    pred = MegaBatch(engines).predict("numpy")
+    for i, e in enumerate(engines):
+        assert float(pred.batch_times[i]) == e.run().batch_time, \
+            e.strat.label()
+
+
+@pytest.mark.search
+@pytest.mark.parametrize("prune", [False, True])
+def test_megabatch_search_identical_to_per_cell(prune):
+    """SearchEngine(megabatch=True) reproduces the sequential path
+    entry-for-entry: same order, bit-identical batch times, identical
+    prune decisions and accounting."""
+    seq = _engine(prune=prune, check_memory=True,
+                  megabatch=False).search(64, 64, 128, **GRID)
+    mega = _engine(prune=prune, check_memory=True,
+                   megabatch=True).search(64, 64, 128, **GRID)
+    assert mega.stats.megabatch_lanes > 0
+    assert [e.strategy for e in seq.entries] \
+        == [e.strategy for e in mega.entries]
+    for a, b in zip(seq.entries, mega.entries):
+        assert a.batch_time == b.batch_time          # bit-identical
+        assert (a.pruned, a.feasible, a.reason) \
+            == (b.pruned, b.feasible, b.reason)
+        assert a.profile_time_s == b.profile_time_s
+    s, m = seq.stats, mega.stats
+    assert (s.candidates, s.evaluated, s.pruned_memory, s.pruned_bound) \
+        == (m.candidates, m.evaluated, m.pruned_memory, m.pruned_bound)
+
+
+def test_cluster_spec_round_trips_and_report_serializes():
+    """ClusterSpec.to_dict/from_dict round-trip (Strategy-style), and
+    search reports carry full, JSON-serializable cluster specs."""
+    from repro.core import ClusterSpec
+
+    spec = ClusterSpec.from_dict(A40_CLUSTER.to_dict())
+    assert spec == A40_CLUSTER
+    assert spec.chip == A40_CLUSTER.chip     # nested dataclass revived
+    res = _engine().search(16, 16, 128, **GRID)
+    rep = search_report(res)
+    assert set(rep["cluster_specs"]) == {A40_CLUSTER.name}
+    dumped = json.dumps(rep["cluster_specs"])
+    revived = ClusterSpec.from_dict(
+        json.loads(dumped)[A40_CLUSTER.name])
+    assert revived == A40_CLUSTER
+    assert rep["search"]["megabatch_lanes"] > 0

@@ -208,12 +208,12 @@ def test_engine_rebuilt_for_mutated_positions():
     caller mutated the positions list in place."""
     sim = _sim()
     pos = sim.positions()
-    bt = sim.predict(positions=pos).batch_time
+    bt = sim.simulate(positions=pos).batch_time
     extra = Event(kind="compute", name="injected",
                   gemms=(GEMM(4096, 4096, 4096),))
     pos[0].fwd = ComposedEvent(pos[0].fwd.name,
                                pos[0].fwd.events + [extra])
-    bt_mut = sim.predict(positions=pos).batch_time
+    bt_mut = sim.simulate(positions=pos).batch_time
     assert bt_mut != bt                   # not the stale engine
     assert bt_mut > bt                    # stage-0 fwd grew
 
@@ -237,14 +237,14 @@ class _ScaledProvider(AnalyticalProvider):
 def test_clear_cache_invalidates_default_engine():
     provider = _ScaledProvider(A40_CLUSTER)
     sim = _sim(provider)
-    bt = sim.predict().batch_time
+    bt = sim.simulate().batch_time
     provider.scale = 2.0
     # without a clear, profiled times (and the engine) legitimately stay
-    assert sim.predict().batch_time == bt
+    assert sim.simulate().batch_time == bt
     provider.clear_cache()
     # regression: the engine used to keep its baked-in (stale) means.
     # Exact 2x is NOT expected — optimizer time bypasses the provider.
-    bt2 = sim.predict().batch_time
+    bt2 = sim.simulate().batch_time
     assert bt2 != bt
     assert bt < bt2 < 2.0 * bt + 1e-12
 
@@ -253,10 +253,10 @@ def test_clear_cache_invalidates_positions_engine():
     provider = _ScaledProvider(A40_CLUSTER)
     sim = _sim(provider)
     pos = sim.positions()
-    bt = sim.predict(positions=pos).batch_time
+    bt = sim.simulate(positions=pos).batch_time
     provider.scale = 3.0
     provider.clear_cache()
-    bt2 = sim.predict(positions=pos).batch_time
+    bt2 = sim.simulate(positions=pos).batch_time
     assert bt2 != bt
     assert bt < bt2 < 3.0 * bt + 1e-12
 

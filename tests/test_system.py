@@ -10,6 +10,7 @@
 import tempfile
 
 import numpy as np
+import pytest
 
 from repro.configs.base import get_config, smoke_config
 from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim,
@@ -20,15 +21,16 @@ from repro.train.train_loop import LoopConfig, fit
 def test_search_ranking_consistent_with_replay():
     cfg = get_config("bert_exlarge")
     provider = AnalyticalProvider(A40_CLUSTER)
-    entries = grid_search(cfg, 16, 16, 512, provider=provider)
+    with pytest.warns(DeprecationWarning, match="grid_search"):
+        entries = grid_search(cfg, 16, 16, 512, provider=provider)
     feasible = [e for e in entries if e.feasible]
     assert len(feasible) >= 10
     best, worst = feasible[0], feasible[-1]
     # paper Table 2: best/worst spread is large (7.37x there)
     assert worst.batch_time / best.batch_time > 3.0
     # replay agrees on the ordering of best vs worst
-    rb = DistSim(cfg, best.strategy, 16, 512, provider).replay(seed=0)
-    rw = DistSim(cfg, worst.strategy, 16, 512, provider).replay(seed=0)
+    rb = DistSim(cfg, best.strategy, 16, 512, provider).simulate(seeds=0).result()
+    rw = DistSim(cfg, worst.strategy, 16, 512, provider).simulate(seeds=0).result()
     assert rb.batch_time < rw.batch_time
 
 
@@ -48,7 +50,7 @@ def test_measured_provider_predicts_real_step_time():
     provider = MeasuredProvider()
     sim = DistSim(cfg, Strategy(), global_batch=4, seq=256,
                   provider=provider)
-    predicted = sim.predict().batch_time
+    predicted = sim.simulate().batch_time
     # CPU timing is noisy and the event model is layer-granular; require
     # factor-3 agreement (paper gets <4% with same-hardware profiling)
     assert predicted > 0

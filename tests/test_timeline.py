@@ -45,7 +45,8 @@ def test_degenerate_pp_with_empty_stages_end_to_end():
     yet prediction and replay still produce finite metrics."""
     cfg = smoke_config(get_config("gpt2_345m"))    # 2 layers
     sim = DistSim(cfg, Strategy(pp=4, microbatches=4), 4, 64, PROVIDER)
-    pred, (act,) = sim.predict_and_replay(seeds=(0,))
+    pred = sim.simulate().result()
+    act = sim.simulate(seeds=(0,)).result()
     assert pred.batch_time > 0
     assert all(0.0 <= u <= 1.0 for u in pred.utilization.values())
     s = error_summary(pred.timeline, act.timeline)
@@ -56,7 +57,7 @@ def test_error_metrics_zero_on_identical():
     sim = DistSim(get_config("bert_large"), Strategy(pp=2, dp=2,
                                                      microbatches=4),
                   16, 128, PROVIDER)
-    tl = sim.predict().timeline
+    tl = sim.simulate().timeline()
     assert batch_time_error(tl, tl) == 0.0
     assert all(v == 0.0 for v in activity_duration_error(tl, tl).values())
     assert all(v == 0.0 for v in utilization_delta(tl, tl).values())
@@ -67,7 +68,8 @@ def test_error_summary_tracks_jitter():
     sim = DistSim(get_config("bert_large"), Strategy(pp=2, dp=2,
                                                      microbatches=4),
                   16, 128, PROVIDER)
-    pred, (act,) = sim.predict_and_replay(seeds=(1,))
+    pred = sim.simulate().result()
+    act = sim.simulate(seeds=(1,)).result()
     s = error_summary(pred.timeline, act.timeline)
     assert s["batch_time_error"] == pytest.approx(
         batch_time_error(pred.timeline, act.timeline))

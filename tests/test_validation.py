@@ -201,7 +201,7 @@ def test_degenerate_oracle_trips_gate():
     cell = MATRIX[0]
     sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
                   cell.seq, AnalyticalProvider(A40_CLUSTER))
-    pred = sim.predict().timeline
+    pred = sim.simulate().timeline()
     empty = Timeline([], n_devices=pred.n_devices)
     assert batch_time_error(pred, empty) == float("inf")
     m = compare_timelines(pred, empty)
@@ -232,7 +232,7 @@ def test_metrics_zero_for_identical_timelines():
     cell = MATRIX[0]
     sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
                   cell.seq, AnalyticalProvider(A40_CLUSTER))
-    tl = sim.predict().timeline
+    tl = sim.simulate().timeline()
     m = compare_timelines(tl, tl)
     assert m == CellMetrics()
 
