@@ -19,8 +19,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
+import subprocess
 import sys
+import tempfile
 import time
 
 from repro.core import AnalyticalProvider, get_cluster
@@ -31,6 +34,7 @@ from repro.validate.report import (dumps, format_validation_report, save)
 GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
                            "goldens", "validation_smoke.json")
 GATE_CACHE_SPEEDUP = 3.0
+GATE_STORE_SPEEDUP = 3.0
 
 
 def _best_of(fn, n=3):
@@ -77,6 +81,71 @@ def cache_gate(cluster: str) -> dict:
     }
 
 
+# Child of store_gate(): one MeasuredProvider sweep in a FRESH python
+# process, wall time measured inside (imports excluded), result
+# reported as JSON on stdout.
+_STORE_GATE_CHILD = """\
+import json, sys, time
+sys.path.insert(0, sys.argv[1])
+import repro.core
+import repro.store                 # hoist run_sweep's lazy import
+from repro.core import get_cluster
+from repro.core.profiler import MeasuredProvider
+from repro.validate import run_sweep
+from repro.validate.sweep import _cell
+from repro.validate.report import dumps
+
+cluster, store = sys.argv[2], sys.argv[3]
+cells = [_cell("gpt2_345m", 1, 2, 2, 4, "1f1b", smoke=True, seq=128)]
+provider = MeasuredProvider(get_cluster(cluster), reps=1)
+t0 = time.perf_counter()
+result = run_sweep(cells, provider=provider, seeds=(0, 1), store=store)
+wall = time.perf_counter() - t0
+json.dump({"wall_s": wall, "lookups": provider.stats.lookups,
+           "evaluations": provider.stats.evaluations,
+           "report": dumps(result)}, sys.stdout)
+"""
+
+
+def _store_gate_child(cluster: str, store_path: str) -> dict:
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", _STORE_GATE_CHILD, src, cluster,
+         store_path], capture_output=True, text=True)
+    if out.returncode != 0:
+        raise RuntimeError(f"store gate child failed:\n{out.stderr}")
+    return json.loads(out.stdout)
+
+
+def store_gate(cluster: str) -> dict:
+    """Persistent-store gate over a MEASURED profile — the economy the
+    paper's Observation 1 is actually about: the cold child jits and
+    times real op groups on this host (the expensive profiling the
+    analytic provider only emulates), the warm child is a FRESH
+    process re-sweeping the same cell from the store. The warm run
+    must be >= 3x faster (observed ~100x), perform ZERO provider
+    evaluations — times and builds come entirely from disk — and
+    reproduce the cold report byte-for-byte. Every run is its own
+    subprocess, so in-process caches can't help."""
+    with tempfile.TemporaryDirectory() as d:
+        store = os.path.join(d, "store")
+        cold = _store_gate_child(cluster, store)
+        t_warm, warm = float("inf"), None
+        for _ in range(2):
+            w = _store_gate_child(cluster, store)
+            if w["wall_s"] < t_warm:
+                t_warm, warm = w["wall_s"], w
+    return {
+        "cold_s": cold["wall_s"],
+        "warm_s": t_warm,
+        "speedup": cold["wall_s"] / t_warm if t_warm else float("inf"),
+        "required_speedup": GATE_STORE_SPEEDUP,
+        "bit_identical": warm["report"] == cold["report"],
+        "warm_evaluations": warm["evaluations"],
+        "warm_lookups": warm["lookups"],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     matrix = ap.add_mutually_exclusive_group()
@@ -98,6 +167,11 @@ def main() -> None:
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the shared build cache (A/B baseline; "
                          "results are bit-identical either way)")
+    ap.add_argument("--store", default="",
+                    help="persistent profile-store directory: event "
+                         "times + engine builds are served from and "
+                         "written back to disk, shared across runs and "
+                         "processes (results stay bit-identical)")
     ap.add_argument("--batch-time-threshold", type=float, default=None)
     ap.add_argument("--activity-threshold", type=float, default=None)
     ap.add_argument("--out", default="validation_report.json",
@@ -129,13 +203,20 @@ def main() -> None:
         thr = dataclasses.replace(thr, activity=args.activity_threshold)
 
     provider = AnalyticalProvider(get_cluster(args.cluster))
-    cache = None if args.no_cache else BuildCache(provider)
+    store = args.store or None
+    if store is not None:
+        # run_sweep builds the PersistentBuildCache itself (it must be
+        # store-backed); the in-memory instance below would conflict
+        cache = None
+        cache_arg = not args.no_cache
+    else:
+        cache = None if args.no_cache else BuildCache(provider)
+        cache_arg = cache if cache is not None else False
     t0 = time.perf_counter()
     result = run_sweep(cells, provider=provider, seeds=seeds,
                        thresholds=thr, jitter_sigma=args.jitter,
                        batched=not args.sequential,
-                       cache=cache if cache is not None else False,
-                       jobs=args.jobs)
+                       cache=cache_arg, jobs=args.jobs, store=store)
     wall = time.perf_counter() - t0
 
     print(format_validation_report(result))
@@ -147,6 +228,8 @@ def main() -> None:
     ps = provider.stats
     print(f"provider: {ps.evaluations} unique events profiled, "
           f"{ps.hits} reuses ({100 * ps.hit_rate:.1f}% hit rate)")
+    if store is not None:
+        print(f"store: {store} ({provider.cache_size} events resident)")
     if cache is not None:
         cs = cache.stats
         print(f"build cache: positions {cs.positions_hits}h/"
@@ -186,6 +269,27 @@ def main() -> None:
         if gate["speedup"] < GATE_CACHE_SPEEDUP:
             print(f"validate/ERROR: warm-cache speedup "
                   f"{gate['speedup']:.1f}x < {GATE_CACHE_SPEEDUP}x",
+                  file=sys.stderr)
+            failed = True
+
+        sg = store_gate(args.cluster)
+        print(f"store gate — fresh-process re-sweep from a warm store: "
+              f"cold {sg['cold_s'] * 1e3:.1f}ms, "
+              f"warm {sg['warm_s'] * 1e3:.1f}ms = "
+              f"{sg['speedup']:.1f}x (gate: {GATE_STORE_SPEEDUP:.0f}x), "
+              f"bit-identical: {sg['bit_identical']}, "
+              f"warm evaluations: {sg['warm_evaluations']}")
+        if not sg["bit_identical"]:
+            print("validate/ERROR: store-served sweep report differs "
+                  "from the cold run", file=sys.stderr)
+            failed = True
+        if sg["warm_evaluations"]:
+            print(f"validate/ERROR: warm store still profiled "
+                  f"{sg['warm_evaluations']} events", file=sys.stderr)
+            failed = True
+        if sg["speedup"] < GATE_STORE_SPEEDUP:
+            print(f"validate/ERROR: warm-store speedup "
+                  f"{sg['speedup']:.1f}x < {GATE_STORE_SPEEDUP}x",
                   file=sys.stderr)
             failed = True
 

@@ -41,6 +41,14 @@ class Strategy:
     def label(self) -> str:
         return f"{self.mp}M{self.pp}P{self.dp}D"
 
+    def microbatch_size(self, global_batch: int) -> int:
+        """Per-microbatch sample count with the ``max(1, ...)`` floor.
+        The ONE definition of the microbatch-derivation formula —
+        ``DistSim.microbatch`` and ``validate.BuildCache`` both call
+        this, so the cache key and the simulator can't drift apart
+        (the drift class ``profiling_report()`` once suffered from)."""
+        return max(1, global_batch // (self.dp * self.microbatches))
+
     # ---- JSON round-trip (repro.validate reports, goldens) ----
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)

@@ -79,9 +79,37 @@ class Provider:
     def clear_cache(self) -> None:
         """Drop profiled event times (stats are kept; reset separately).
         Bumps :attr:`cache_version` so engines holding baked-in means
-        from the old cache are invalidated, not silently reused."""
+        from the old cache are invalidated, not silently reused, and
+        clears any subclass-derived caches (:meth:`_clear_derived`) so
+        re-profiling can't serve measurements from before the clear."""
         self._cache.clear()
+        self._clear_derived()
         self.cache_version += 1
+
+    def _clear_derived(self) -> None:
+        """Hook for subclasses holding caches derived from profiling
+        (e.g. ``MeasuredProvider._group_cache``): called by
+        :meth:`clear_cache` so a clear drops EVERYTHING, not just the
+        event-time dict."""
+
+    @property
+    def cache_size(self) -> int:
+        """Number of unique events currently profiled — the public
+        accessor for accounting surfaces (``ProfileCache``, stores)
+        that previously reached into ``_cache``."""
+        return len(self._cache)
+
+    def bare(self) -> "Provider":
+        """Copy of this provider with EMPTY event/derived caches and
+        fresh stats (same cluster, config and ``cache_version``) — what
+        the parallel executor ships to worker processes when a disk
+        :class:`repro.store.ProfileStore` carries the warm events
+        instead of the pickled parent cache."""
+        import copy
+        p = copy.copy(self)
+        p._cache = {}
+        p.stats = ProviderStats()
+        return p
 
     # ---- parallel-sweep shard support (repro.validate.executor) ----
     def cache_snapshot(self) -> Dict[Event, float]:
@@ -151,6 +179,16 @@ class MeasuredProvider(Provider):
         super().__init__(cluster)
         self.reps = reps
         self._group_cache: Dict[tuple, float] = {}
+
+    def _clear_derived(self) -> None:
+        # without this, a clear_cache() followed by re-profiling would
+        # silently reuse jit timings measured before the clear
+        self._group_cache.clear()
+
+    def bare(self) -> "MeasuredProvider":
+        p = super().bare()
+        p._group_cache = {}
+        return p
 
     def _time_group(self, dims: tuple) -> float:
         if dims in self._group_cache:

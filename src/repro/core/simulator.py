@@ -106,8 +106,11 @@ class SimBatch:
         return float(self.batch.batch_times[0])
 
     def throughput_iters(self) -> np.ndarray:
+        # out= zeros: without it np.divide(..., where=) leaves the
+        # masked entries as uninitialized memory, which np.where then
+        # multiplies — NaN/Inf garbage could poison the 0.0 branch
         bt = self.batch.batch_times
-        return np.where(bt > 0, np.divide(1.0, bt, where=bt > 0), 0.0)
+        return np.divide(1.0, bt, out=np.zeros_like(bt), where=bt > 0)
 
     def throughput_tokens(self) -> np.ndarray:
         return self.throughput_iters() * (self.global_batch * self.seq)
@@ -240,10 +243,31 @@ class DistSim:
                 self.seq) for s in seeds]
         return pred, replays
 
+    # ---- store-served query front-end ----
+    @classmethod
+    def serve(cls, store, clusters=None, **kwargs):
+        """A :class:`repro.store.StrategyServer` over a warm
+        :class:`repro.store.ProfileStore`: answers "(model, strategy,
+        cluster) -> predicted batch time / memory headroom /
+        utilization" queries at interactive latency (persisted events +
+        engine builds; no re-profiling on a warm store)."""
+        from repro.store.serve import StrategyServer
+        return StrategyServer(store, clusters=clusters, **kwargs)
+
+    @classmethod
+    def serve_batch(cls, queries, store, clusters=None, **kwargs):
+        """One-shot batch query: build a server over ``store`` and
+        answer ``queries`` (a sequence of
+        :class:`repro.store.ServeQuery`) via ONE mega-batch array call
+        per queried cluster. Returns ``List[ServeAnswer]`` in query
+        order; batch times are bit-identical to per-query
+        ``simulate()``."""
+        return cls.serve(store, clusters=clusters, **kwargs) \
+            .answer_batch(queries)
+
     # ---- search-engine hooks ----
     def microbatch(self) -> int:
-        return max(1, self.global_batch
-                   // (self.strategy.dp * self.strategy.microbatches))
+        return self.strategy.microbatch_size(self.global_batch)
 
     def positions(self) -> List[Stage]:
         """Pipeline positions (pp*vpp stages) with composed fwd/bwd

@@ -21,21 +21,30 @@ from repro.core.profiler import AnalyticalProvider, Provider
 
 
 class ProfileCache:
-    """One provider (and thus one event-time cache) per cluster."""
+    """One provider (and thus one event-time cache) per cluster.
 
-    def __init__(self, providers: Mapping[str, Provider]):
+    Pass ``store`` (a :class:`repro.store.ProfileStore` or path) to
+    persist the dedup layer across search invocations: per-cluster
+    build caches become :class:`repro.store.PersistentBuildCache`\\ s,
+    so a fresh process re-running the same search loads the profiled
+    events + engine builds from disk instead of re-deriving them."""
+
+    def __init__(self, providers: Mapping[str, Provider], store=None):
         self.providers: Dict[str, Provider] = dict(providers)
+        self.store = store
         self._build_caches: Dict[str, object] = {}
 
     @classmethod
     def for_clusters(cls, clusters: Iterable[ClusterSpec],
                      provider_factory: Callable[[ClusterSpec], Provider]
-                     = AnalyticalProvider) -> "ProfileCache":
-        return cls({c.name: provider_factory(c) for c in clusters})
+                     = AnalyticalProvider, store=None) -> "ProfileCache":
+        return cls({c.name: provider_factory(c) for c in clusters},
+                   store=store)
 
     @classmethod
-    def from_provider(cls, provider: Provider) -> "ProfileCache":
-        return cls({provider.cluster.name: provider})
+    def from_provider(cls, provider: Provider,
+                      store=None) -> "ProfileCache":
+        return cls({provider.cluster.name: provider}, store=store)
 
     def provider(self, cluster: ClusterSpec) -> Provider:
         return self.providers[cluster.name]
@@ -49,10 +58,24 @@ class ProfileCache:
         sweep stack, which search-only callers don't need."""
         bc = self._build_caches.get(cluster.name)
         if bc is None:
-            from repro.validate.build_cache import BuildCache
-            bc = BuildCache(self.provider(cluster))
+            if self.store is not None:
+                from repro.store.persistent import PersistentBuildCache
+                bc = PersistentBuildCache(self.provider(cluster),
+                                          self.store)
+            else:
+                from repro.validate.build_cache import BuildCache
+                bc = BuildCache(self.provider(cluster))
             self._build_caches[cluster.name] = bc
         return bc
+
+    def flush(self) -> int:
+        """Persist newly-profiled events of every store-backed build
+        cache (no-op without a store). Returns events written."""
+        n = 0
+        for bc in self._build_caches.values():
+            if hasattr(bc, "flush"):
+                n += bc.flush()
+        return n
 
     @property
     def clusters(self) -> list:
@@ -69,7 +92,7 @@ class ProfileCache:
 
     @property
     def unique_events(self) -> int:
-        return sum(len(p._cache) for p in self.providers.values())
+        return sum(p.cache_size for p in self.providers.values())
 
     def reset_stats(self) -> None:
         for p in self.providers.values():

@@ -1,0 +1,30 @@
+"""repro.store — disk-backed persistent profile store + query service.
+
+The paper's unique-event dedup pushed to fleet scale: one
+content-addressed store of profiled event times and engine builds,
+shared across processes (nightly reruns, search invocations, sweep
+executor workers), with a thin simulator-as-a-service front-end on top:
+
+    from repro.store import ProfileStore, ServeQuery
+    from repro.core.simulator import DistSim
+
+    run_sweep(cells, store="profile_store/")       # warms the store
+    server = DistSim.serve("profile_store/")       # zero re-profiling
+    answers = server.answer_batch([ServeQuery(...), ...])
+
+Store-served sweeps, searches and queries are bit-identical to cold
+in-process runs (differential tests in ``tests/test_store.py``).
+"""
+from repro.store.persistent import PersistentBuildCache
+from repro.store.profile_store import (FORMAT_VERSION, ProfileStore,
+                                       StoreStats, event_from_dict,
+                                       event_key, event_to_dict,
+                                       open_store, provider_namespace)
+from repro.store.serve import ServeAnswer, ServeQuery, StrategyServer
+
+__all__ = [
+    "FORMAT_VERSION", "ProfileStore", "StoreStats", "event_from_dict",
+    "event_key", "event_to_dict", "open_store", "provider_namespace",
+    "PersistentBuildCache", "ServeAnswer", "ServeQuery",
+    "StrategyServer",
+]

@@ -1,0 +1,201 @@
+"""Simulator-as-a-service: strategy queries over a warm ProfileStore.
+
+The production framing of the paper's unique-event dedup: a
+capacity-planning service answering "(model, strategy, cluster) →
+predicted batch time, memory headroom, utilization" at interactive
+latency. All heavy state — profiled event times and engine builds —
+comes from a shared :class:`~repro.store.profile_store.ProfileStore`,
+so a warm server performs ZERO provider evaluations (asserted in
+``tests/test_store.py``); queries only pay schedule construction and
+one array evaluation.
+
+The batch path scores every queried strategy of a cluster in ONE
+:class:`~repro.core.megabatch.MegaBatch` array call, so answering a
+thousand queries costs one padded ``(steps, K)`` program per cluster —
+batch times stay bit-identical to per-query ``DistSim.simulate()``.
+
+    server = DistSim.serve("/var/distsim/store")
+    ans = server.answer(ServeQuery("gpt2_345m", Strategy(pp=2, dp=2,
+                                   microbatches=4)))
+    answers = server.answer_batch(queries)      # mega-batch scored
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import get_config, smoke_config
+from repro.core.costmodel import A40_CLUSTER, CLUSTERS, ClusterSpec
+from repro.core.events import Strategy
+from repro.core.megabatch import MegaBatch
+from repro.core.profiler import AnalyticalProvider
+from repro.search.prune import HBM_BUDGET, estimate_memory
+from repro.store.persistent import PersistentBuildCache
+from repro.store.profile_store import ProfileStore, open_store
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeQuery:
+    """One capacity-planning question."""
+    arch: str
+    strategy: Strategy
+    global_batch: int = 16
+    seq: int = 512
+    smoke: bool = False                    # reduce arch via smoke_config
+    cluster: str = A40_CLUSTER.name       # registry name
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["strategy"] = self.strategy.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ServeQuery":
+        d = dict(d)
+        d["strategy"] = Strategy.from_dict(d["strategy"])
+        from repro.core.serde import dataclass_from_dict
+        return dataclass_from_dict(cls, d)
+
+
+@dataclasses.dataclass
+class ServeAnswer:
+    """The service's reply: predicted iteration economics + memory."""
+    query: ServeQuery
+    batch_time: float           # bit-identical to DistSim.simulate()
+    throughput_iters: float
+    throughput_tokens: float
+    mem_bytes: float            # estimated per-device HBM footprint
+    hbm_headroom: float         # budgeted HBM minus footprint
+    feasible: bool              # fits in the HBM budget
+    utilization_mean: float     # mean busy fraction across devices
+    bubble_fraction: float
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["query"] = self.query.to_dict()
+        return d
+
+
+class StrategyServer:
+    """Query front-end over one store (``DistSim.serve(store)``).
+
+    Holds one provider + :class:`PersistentBuildCache` per cluster
+    (created lazily on first query for that cluster, which loads the
+    persisted events). Repeat queries reuse in-memory engines and the
+    compiled mega-batch program; newly-profiled events (cold entries)
+    are flushed back to the store after every batch, so the store warms
+    monotonically under live traffic.
+    """
+
+    _PROGRAM_MEMO_MAX = 8
+
+    def __init__(self, store, clusters: Optional[Sequence[ClusterSpec]]
+                 = None, provider_factory=AnalyticalProvider,
+                 backend: str = "auto"):
+        self.store: ProfileStore = open_store(store)
+        specs = list(clusters) if clusters is not None \
+            else list(CLUSTERS.values())
+        self.clusters: Dict[str, ClusterSpec] = {c.name: c for c in specs}
+        self.provider_factory = provider_factory
+        self.backend = backend
+        self._caches: Dict[str, PersistentBuildCache] = {}
+        self._programs: "OrderedDict" = OrderedDict()
+        self.queries_answered = 0
+
+    # ---- plumbing ----
+
+    def _cache_for(self, cluster_name: str) -> PersistentBuildCache:
+        bc = self._caches.get(cluster_name)
+        if bc is None:
+            try:
+                spec = self.clusters[cluster_name]
+            except KeyError:
+                raise ValueError(
+                    f"unknown cluster {cluster_name!r}; served: "
+                    f"{sorted(self.clusters)}") from None
+            bc = PersistentBuildCache(self.provider_factory(spec),
+                                      self.store)
+            self._caches[cluster_name] = bc
+        return bc
+
+    @staticmethod
+    def _resolve_cfg(q: ServeQuery):
+        cfg = get_config(q.arch)
+        return smoke_config(cfg) if q.smoke else cfg
+
+    # ---- the query surface ----
+
+    def answer(self, query: ServeQuery) -> ServeAnswer:
+        return self.answer_batch([query])[0]
+
+    def answer_batch(self, queries: Sequence[ServeQuery]
+                     ) -> List[ServeAnswer]:
+        """Answer all queries, one mega-batch array call per distinct
+        cluster, answers returned in query order."""
+        queries = list(queries)
+        by_cluster: "OrderedDict[str, List[int]]" = OrderedDict()
+        for i, q in enumerate(queries):
+            by_cluster.setdefault(q.cluster, []).append(i)
+
+        answers: List[Optional[ServeAnswer]] = [None] * len(queries)
+        for cname, idxs in by_cluster.items():
+            bc = self._cache_for(cname)
+            spec = self.clusters[cname]
+            budget = spec.chip.hbm_bytes * HBM_BUDGET
+            engines = []
+            meta = []
+            for i in idxs:
+                q = queries[i]
+                cfg = self._resolve_cfg(q)
+                micro = q.strategy.microbatch_size(q.global_batch)
+                mem = estimate_memory(cfg, q.strategy, micro, q.seq)
+                eng = bc.engine_for_cfg(cfg, q.strategy,
+                                        q.global_batch, q.seq)
+                meta.append((i, q, mem, budget - mem))
+                engines.append(eng)
+
+            # engine objects are stable across repeat queries (the
+            # build cache returns incumbents), so a repeat batch reuses
+            # the compiled program and pays only the array eval
+            key = (cname, tuple(id(e) for e in engines))
+            mb = self._programs.get(key)
+            if mb is None:
+                mb = MegaBatch(engines)
+                self._programs[key] = mb
+                while len(self._programs) > self._PROGRAM_MEMO_MAX:
+                    self._programs.popitem(last=False)
+            pred = mb.predict(self.backend)
+
+            for lane, (i, q, mem, headroom) in enumerate(meta):
+                bt = float(pred.batch_times[lane])
+                bubble = float(pred.bubble_fractions[lane])
+                answers[i] = ServeAnswer(
+                    query=q, batch_time=bt,
+                    throughput_iters=1.0 / bt if bt else 0.0,
+                    throughput_tokens=(q.global_batch * q.seq / bt
+                                       if bt else 0.0),
+                    mem_bytes=mem, hbm_headroom=headroom,
+                    feasible=headroom > 0,
+                    utilization_mean=1.0 - bubble,
+                    bubble_fraction=bubble)
+            bc.flush()          # persist any cold-profiled events
+        self.queries_answered += len(queries)
+        assert all(a is not None for a in answers)
+        return answers
+
+    # ---- accounting ----
+
+    def snapshot(self) -> Dict:
+        """Per-cluster provider + build-cache accounting, plus store
+        stats — the 'zero evaluations on a warm store' evidence."""
+        out: Dict = {"queries_answered": self.queries_answered,
+                     "store": self.store.snapshot(), "clusters": {}}
+        for name, bc in self._caches.items():
+            ps = bc.provider.stats
+            out["clusters"][name] = {
+                "evaluations": ps.evaluations, "hits": ps.hits,
+                "unique_events": bc.provider.cache_size,
+                "builds": bc.stats.to_dict(),
+            }
+        return out

@@ -30,7 +30,7 @@ cache is cleared (``Provider.cache_version``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ArchConfig, get_config, smoke_config
 from repro.core.engine import EngineBuild, EventFlowEngine
@@ -107,7 +107,9 @@ class BuildCache:
 
     @staticmethod
     def _microbatch(strat: Strategy, global_batch: int) -> int:
-        return max(1, global_batch // (strat.dp * strat.microbatches))
+        # delegate to the ONE shared floor formula (Strategy) so this
+        # cache key can never drift from DistSim.microbatch()
+        return strat.microbatch_size(global_batch)
 
     @staticmethod
     def _resolve(arch: str, smoke: bool) -> ArchConfig:
@@ -142,13 +144,28 @@ class BuildCache:
         if hit is not None:
             self.stats.build_hits += 1
             return hit
+        ext = self._build_fallback(key)
+        if ext is not None:
+            self._builds[key] = ext
+            self.stats.build_hits += 1
+            return ext
         self.stats.build_misses += 1
         pos = self.positions_for(cfg, strat, microbatch, seq)
         # with_dp_sync=None: precompute sync means whenever dp > 1 so
         # pipedream and the syncing schedules share one build
         build = EngineBuild(pos, strat, self.provider, with_dp_sync=None)
         self._builds[key] = build
+        self._build_created(key, build)
         return build
+
+    # secondary-lookup hooks for subclasses backed by external storage
+    # (repro.store.PersistentBuildCache): a fallback hit counts as a
+    # build hit, a freshly-computed build is offered for persisting.
+    def _build_fallback(self, key: Tuple) -> Optional[EngineBuild]:
+        return None
+
+    def _build_created(self, key: Tuple, build: EngineBuild) -> None:
+        pass
 
     def engine_for_cfg(self, cfg: ArchConfig, strat: Strategy,
                        global_batch: int, seq: int) -> EventFlowEngine:

@@ -66,17 +66,39 @@ def _run_shard(payload) -> Tuple[List[Tuple[int, CellResult]], dict, int,
                                  BuildCacheStats]:
     """One worker: run a slice of cells against a private provider
     shard; report results, the shard's newly-profiled events, its
-    lookup count and its build-cache accounting."""
+    lookup count and its build-cache accounting.
+
+    With a ``store_path`` the shard provider arrives BARE (no pickled
+    parent event cache): the worker opens the shared disk store, loads
+    the persisted events (the parent flushed its own before spawning)
+    and serves/persists engine builds through it — closing the old
+    warm-cache gap where a passed ``BuildCache`` was neither consulted
+    nor warmed under ``jobs > 1``."""
     (provider, indexed_cells, seeds, thresholds, jitter_sigma, batched,
-     use_cache) = payload
+     use_cache, store_path) = payload
     provider.stats.reset()
+    store = None
+    if store_path is not None:
+        from repro.store import PersistentBuildCache, open_store
+        store = open_store(store_path)
+        if use_cache:
+            cache = PersistentBuildCache(provider, store)  # loads events
+        else:
+            cache = None
+            store.load_events(provider)
+    else:
+        cache = BuildCache(provider) if use_cache else None
     known = set(provider.cache_snapshot())
-    cache = BuildCache(provider) if use_cache else None
     results = [(idx, run_cell(cell, provider, seeds, thresholds,
                               jitter_sigma, batched=batched, cache=cache))
                for idx, cell in indexed_cells]
     delta = {e: t for e, t in provider.cache_snapshot().items()
              if e not in known}
+    if store is not None:
+        if cache is not None:
+            cache.flush()
+        elif delta:
+            store.save_events(provider, delta)
     cache_stats = cache.stats if cache is not None else BuildCacheStats()
     return results, delta, provider.stats.lookups, cache_stats
 
@@ -86,8 +108,8 @@ def run_parallel(cells: Sequence[ValidationCell], provider: Provider,
                  thresholds: Optional[Thresholds] = None,
                  jitter_sigma: float = 0.025, jobs: int = 2,
                  batched: bool = True, use_cache: bool = True,
-                 cache_stats: Optional[BuildCacheStats] = None
-                 ) -> List[CellResult]:
+                 cache_stats: Optional[BuildCacheStats] = None,
+                 store=None) -> List[CellResult]:
     """Evaluate ``cells`` across ``jobs`` worker processes.
 
     Mutates ``provider`` exactly as the serial sweep would: its event
@@ -95,24 +117,62 @@ def run_parallel(cells: Sequence[ValidationCell], provider: Provider,
     advance by the serial-equivalent (evaluations += newly unique,
     hits += remaining lookups). Pass ``cache_stats`` to additionally
     accumulate the shards' build-cache accounting.
+
+    ``store`` (a :class:`repro.store.ProfileStore` or path) switches
+    the shard hand-off to disk: the parent flushes its profiled events
+    once, ships BARE providers (no pickled event cache per shard), and
+    each worker opens the store for warm events + persisted engine
+    builds, flushing its own additions back. Results and accounting
+    stay identical; the store — not a per-run in-memory cache — is
+    what survives for the next process.
     """
     thresholds = thresholds or Thresholds()
     cells = list(cells)
     jobs = max(1, min(int(jobs), len(cells) or 1))
+    if store is not None:
+        from repro.store import PersistentBuildCache, open_store
+        store = open_store(store)
     if jobs == 1:
-        cache = BuildCache(provider) if use_cache else None
+        if store is not None and use_cache:
+            cache = PersistentBuildCache(provider, store)
+        elif store is not None:
+            cache = None
+            store.load_events(provider)
+        else:
+            cache = BuildCache(provider) if use_cache else None
+        known = set(provider.cache_snapshot()) if store is not None \
+            else None
         out = [run_cell(c, provider, seeds, thresholds, jitter_sigma,
                         batched=batched, cache=cache)
                for c in cells]
+        if store is not None:
+            if cache is not None:
+                cache.flush()
+            else:
+                delta = {e: t
+                         for e, t in provider.cache_snapshot().items()
+                         if e not in known}
+                if delta:
+                    store.save_events(provider, delta)
         if cache is not None and cache_stats is not None:
             cache_stats.merge(cache.stats)
         return out
 
+    if store is not None:
+        # disk is the shard hand-off: parent's events go through the
+        # store once, workers start from a BARE provider
+        store.load_events(provider)
+        store.save_events(provider)
+        ship = provider.bare()
+        store_path = store.path
+    else:
+        ship = provider
+        store_path = None
     payloads = []
     for idx_range in _chunk(len(cells), jobs):
         indexed = [(i, cells[i]) for i in idx_range]
-        payloads.append((provider, indexed, tuple(seeds), thresholds,
-                         jitter_sigma, batched, use_cache))
+        payloads.append((ship, indexed, tuple(seeds), thresholds,
+                         jitter_sigma, batched, use_cache, store_path))
 
     with ProcessPoolExecutor(max_workers=len(payloads),
                              mp_context=_mp_context()) as pool:
@@ -132,5 +192,9 @@ def run_parallel(cells: Sequence[ValidationCell], provider: Provider,
     # matter how many shards profiled it; everything else was a reuse
     provider.stats.evaluations += new_events
     provider.stats.hits += total_lookups - new_events
+    if store is not None:
+        # absorb events persisted by workers (or concurrent writers)
+        # that no shard delta carried — merge_cache leaves stats alone
+        store.load_events(provider)
     assert all(r is not None for r in results)
     return results

@@ -247,15 +247,21 @@ def run_cell(cell: ValidationCell, provider: Provider,
 
 
 def run_sweep(cells: Optional[Sequence[ValidationCell]] = None,
-              cluster: Union[str, ClusterSpec] = A40_CLUSTER,
+              cluster: Union[str, ClusterSpec, None] = None,
               seeds: Sequence[int] = (0, 1, 2),
               thresholds: Optional[Thresholds] = None,
               jitter_sigma: float = 0.025,
               provider: Optional[Provider] = None,
               batched: bool = True,
               cache: Union[bool, BuildCache] = True,
-              jobs: int = 1) -> SweepResult:
+              jobs: int = 1,
+              store=None) -> SweepResult:
     """Run the matrix; one shared provider = one event profile cache.
+
+    ``cluster`` defaults to the provider's (or ``A40_CLUSTER`` when no
+    provider is given); passing BOTH a cluster and a provider whose
+    cluster disagrees raises ``ValueError`` — a silently-ignored
+    cluster would sweep different hardware than asked.
 
     ``cache`` — ``True`` (default) shares one content-addressed
     :class:`BuildCache` across all cells (pass your own instance to
@@ -266,7 +272,15 @@ def run_sweep(cells: Optional[Sequence[ValidationCell]] = None,
     the provider's unique-event accounting — matches the serial sweep.
     Workers build their own caches (engines hold unpicklable state),
     so with ``jobs > 1`` a passed instance only accumulates the
-    shards' hit/miss accounting — it is neither consulted nor warmed.
+    shards' hit/miss accounting — it is neither consulted nor warmed;
+    pass ``store`` to share warm state across processes instead.
+
+    ``store`` — a :class:`repro.store.ProfileStore` (or its directory
+    path): profiled event times and engine builds are served from and
+    persisted to disk, shared across sweeps, searches, executor
+    workers and *processes*. With ``jobs > 1`` the workers open the
+    store themselves instead of receiving the parent's pickled event
+    cache. Store-served sweeps are bit-identical to cold runs.
     """
     if isinstance(cluster, str):
         cluster = get_cluster(cluster)
@@ -274,7 +288,13 @@ def run_sweep(cells: Optional[Sequence[ValidationCell]] = None,
     thresholds = thresholds or Thresholds()
     if provider is None and isinstance(cache, BuildCache):
         provider = cache.provider     # a warm cache implies its provider
-    provider = provider or AnalyticalProvider(cluster)
+    if (provider is not None and cluster is not None
+            and provider.cluster != cluster):
+        raise ValueError(
+            f"cluster {cluster.name!r} disagrees with the provider's "
+            f"{provider.cluster.name!r}; pass one or the other (the "
+            f"provider's event times are profiled for ITS cluster)")
+    provider = provider or AnalyticalProvider(cluster or A40_CLUSTER)
     if isinstance(cache, BuildCache) and cache.provider is not provider:
         raise ValueError("cache is bound to a different provider than "
                          "the sweep's")
@@ -284,15 +304,43 @@ def run_sweep(cells: Optional[Sequence[ValidationCell]] = None,
             cells, provider, seeds, thresholds, jitter_sigma, jobs=jobs,
             batched=batched, use_cache=bool(cache),
             cache_stats=cache.stats if isinstance(cache, BuildCache)
-            else None)
+            else None, store=store)
     else:
+        opened = None
+        known = None
+        if store is not None:
+            from repro.store import (PersistentBuildCache, open_store)
+            opened = open_store(store)
         if isinstance(cache, BuildCache):
             bc: Optional[BuildCache] = cache
+            if opened is not None \
+                    and not isinstance(cache, PersistentBuildCache):
+                raise ValueError(
+                    "store given alongside a plain BuildCache instance;"
+                    " pass cache=True (a PersistentBuildCache is built"
+                    " for you) or a PersistentBuildCache")
+        elif cache:
+            bc = (PersistentBuildCache(provider, opened)
+                  if opened is not None else BuildCache(provider))
         else:
-            bc = BuildCache(provider) if cache else None
+            bc = None
+            if opened is not None:
+                # cache-less store-served sweep: events still come
+                # from / go back to disk
+                opened.load_events(provider)
+                known = set(provider.cache_snapshot())
         results = [run_cell(c, provider, seeds, thresholds, jitter_sigma,
                             batched=batched, cache=bc)
                    for c in cells]
+        if opened is not None:
+            if bc is not None:
+                bc.flush()
+            else:
+                delta = {e: t
+                         for e, t in provider.cache_snapshot().items()
+                         if e not in known}
+                if delta:
+                    opened.save_events(provider, delta)
     return SweepResult(cells=results, thresholds=thresholds,
                        cluster=provider.cluster.name, seeds=list(seeds),
                        jitter_sigma=jitter_sigma)

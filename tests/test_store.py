@@ -1,0 +1,340 @@
+"""Persistent profile store + serve front-end (ISSUE 7).
+
+Acceptance pins:
+* store-served sweeps — serial, parallel (``jobs=2``), and from a
+  FRESH process — are bit-identical to cold in-process runs (same
+  ``dumps()`` JSON) and perform ZERO provider evaluations on a warm
+  store;
+* corrupted entries (garbage JSON shards, truncated build pickles) and
+  stale ``cache_version`` entries are rejected and counted, never
+  served;
+* ``DistSim.serve_batch(queries)`` answers match per-query
+  ``DistSim.simulate()`` batch times EXACTLY, and a warm server
+  resolves the whole smoke matrix without profiling a single event;
+* regression fixes ride along: ``MeasuredProvider.clear_cache()``
+  drops the derived jit-timing cache, ``run_sweep`` rejects a cluster
+  that disagrees with the provider's, ``SimBatch.throughput_iters``
+  never leaks uninitialized memory, and the microbatch floor formula
+  lives in exactly one place (``Strategy.microbatch_size``).
+"""
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  — establishes the package import order
+from repro.configs.base import get_config, smoke_config
+from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim, Strategy
+from repro.core.costmodel import CLUSTERS
+from repro.core.profiler import MeasuredProvider
+from repro.core.simulator import SimBatch
+from repro.store import (PersistentBuildCache, ProfileStore, ServeQuery,
+                         open_store)
+from repro.validate import BuildCache, run_sweep, smoke_matrix
+from repro.validate.report import dumps
+
+SEEDS = (0, 1)
+MATRIX = smoke_matrix()
+SMALL = MATRIX[:4]
+
+
+def _fresh_provider():
+    return AnalyticalProvider(A40_CLUSTER)
+
+
+# --------------------------------------------------------------------------
+# event round-trip: exact floats, structural identity
+# --------------------------------------------------------------------------
+
+def test_event_times_roundtrip_bit_exact(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    p1 = _fresh_provider()
+    run_sweep(SMALL, provider=p1, seeds=SEEDS)
+    assert store.save_events(p1) == p1.cache_size
+    p2 = _fresh_provider()
+    assert store.load_events(p2) == p1.cache_size
+    # same keys, same floats, to the last bit — JSON repr round-trips
+    assert p2.cache_snapshot() == p1.cache_snapshot()
+    # loads are neither evaluations nor hits
+    assert p2.stats.evaluations == 0 and p2.stats.hits == 0
+
+
+def test_save_events_idempotent(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    p = _fresh_provider()
+    run_sweep(SMALL, provider=p, seeds=SEEDS)
+    assert store.save_events(p) > 0
+    assert store.save_events(p) == 0       # identical shard skipped
+    assert store.entry_counts(p)["event_shards"] == 1
+
+
+# --------------------------------------------------------------------------
+# store-served sweeps: bit-identity + zero warm evaluations
+# --------------------------------------------------------------------------
+
+def test_serial_store_sweep_bit_identical_and_warm(tmp_path):
+    cold = run_sweep(MATRIX, provider=_fresh_provider(), seeds=SEEDS)
+    p1 = _fresh_provider()
+    written = run_sweep(MATRIX, provider=p1, seeds=SEEDS,
+                        store=str(tmp_path))
+    assert dumps(written) == dumps(cold)
+    p2 = _fresh_provider()
+    warm = run_sweep(MATRIX, provider=p2, seeds=SEEDS,
+                     store=str(tmp_path))
+    assert dumps(warm) == dumps(cold)
+    # stronger than zero evaluations: persisted EngineBuilds carry the
+    # precomputed means, so the provider is never even consulted
+    assert p2.stats.lookups == 0
+    assert p2.cache_size == p1.cache_size  # events still all loaded
+
+
+def test_parallel_store_sweep_bit_identical_and_warm(tmp_path):
+    cold = run_sweep(MATRIX, provider=_fresh_provider(), seeds=SEEDS)
+    p1 = _fresh_provider()
+    par = run_sweep(MATRIX, provider=p1, seeds=SEEDS, jobs=2,
+                    store=str(tmp_path))
+    assert dumps(par) == dumps(cold)
+    # serial-equivalent accounting survives the disk hand-off
+    assert p1.stats.evaluations == p1.cache_size
+    p2 = _fresh_provider()
+    warm = run_sweep(MATRIX, provider=p2, seeds=SEEDS, jobs=2,
+                     store=str(tmp_path))
+    assert dumps(warm) == dumps(cold)
+    assert p2.stats.evaluations == 0
+
+
+def test_cacheless_store_sweep_still_persists(tmp_path):
+    p1 = _fresh_provider()
+    run_sweep(SMALL, provider=p1, seeds=SEEDS, cache=False,
+              store=str(tmp_path))
+    p2 = _fresh_provider()
+    assert open_store(str(tmp_path)).load_events(p2) == p1.cache_size
+
+
+def test_cross_process_round_trip(tmp_path):
+    """The tentpole claim: a worker process writes the store, a FRESH
+    python process reads it — zero evaluations, bit-identical report."""
+    cold = run_sweep(SMALL, provider=_fresh_provider(), seeds=SEEDS,
+                     store=str(tmp_path))
+    src = os.path.abspath(os.path.join(
+        os.path.dirname(repro.core.__file__), "..", ".."))
+    child = (
+        "import sys; sys.path.insert(0, {src!r})\n"
+        "import repro.core\n"
+        "from repro.core import A40_CLUSTER, AnalyticalProvider\n"
+        "from repro.validate import run_sweep, smoke_matrix\n"
+        "from repro.validate.report import dumps\n"
+        "p = AnalyticalProvider(A40_CLUSTER)\n"
+        "r = run_sweep(smoke_matrix()[:4], provider=p, seeds=(0, 1),\n"
+        "              store={store!r})\n"
+        "assert p.stats.evaluations == 0, p.stats.evaluations\n"
+        "sys.stdout.write(dumps(r))\n"
+    ).format(src=src, store=str(tmp_path))
+    out = subprocess.run([sys.executable, "-c", child],
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    assert out.stdout == dumps(cold)
+
+
+def test_build_cache_serves_builds_from_disk(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    p1 = _fresh_provider()
+    bc1 = PersistentBuildCache(p1, store)
+    run_sweep(SMALL, provider=p1, seeds=SEEDS, cache=bc1)
+    bc1.flush()
+    assert store.stats.builds_saved > 0
+    store2 = ProfileStore(str(tmp_path))
+    bc2 = PersistentBuildCache(_fresh_provider(), store2)
+    run_sweep(SMALL, provider=bc2.provider, seeds=SEEDS, cache=bc2)
+    assert store2.stats.builds_loaded > 0
+    assert bc2.stats.build_misses == 0     # every build came from disk
+
+
+# --------------------------------------------------------------------------
+# rejection: corruption, staleness, namespace isolation
+# --------------------------------------------------------------------------
+
+def _warm_store(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    p = _fresh_provider()
+    bc = PersistentBuildCache(p, store)
+    run_sweep(SMALL, provider=p, seeds=SEEDS, cache=bc)
+    bc.flush()
+    return store, p
+
+
+def test_corrupt_event_shard_rejected(tmp_path):
+    store, p = _warm_store(tmp_path)
+    d = store._events_dir(p)
+    with open(os.path.join(d, "deadbeefdeadbeefdeadbeef.json"), "w") as f:
+        f.write("{not json")
+    p2 = _fresh_provider()
+    store2 = ProfileStore(str(tmp_path))
+    assert store2.load_events(p2) == p.cache_size  # good shard still serves
+    assert store2.stats.corrupt_rejected == 1
+
+
+def test_truncated_build_pickle_rejected(tmp_path):
+    store, p = _warm_store(tmp_path)
+    d = store._builds_dir(p)
+    victim = os.path.join(d, sorted(os.listdir(d))[0])
+    with open(victim, "rb") as f:
+        data = f.read()
+    with open(victim, "wb") as f:
+        f.write(data[:len(data) // 2])     # truncated mid-pickle
+    store2 = ProfileStore(str(tmp_path))
+    p2 = _fresh_provider()
+    bc2 = PersistentBuildCache(p2, store2)
+    res = run_sweep(SMALL, provider=p2, seeds=SEEDS, cache=bc2)
+    assert res.passed
+    assert store2.stats.corrupt_rejected >= 1
+    assert bc2.stats.build_misses >= 1     # recomputed, not served
+
+
+def test_stale_cache_version_rejected(tmp_path):
+    store, p = _warm_store(tmp_path)
+    bumped = _fresh_provider()
+    bumped.clear_cache()                   # version 0 -> 1
+    store2 = ProfileStore(str(tmp_path))
+    assert store2.load_events(bumped) == 0
+    assert store2.stats.stale_rejected == 1
+    # and builds: the persisted version-0 entries must not serve either
+    bc = PersistentBuildCache(bumped, store2)
+    run_sweep(SMALL, provider=bumped, seeds=SEEDS, cache=bc)
+    assert store2.stats.builds_loaded == 0
+    assert store2.stats.stale_rejected > 1
+
+
+def test_namespaces_isolated_per_cluster(tmp_path):
+    store, p = _warm_store(tmp_path)
+    other_cluster = next(c for c in CLUSTERS.values()
+                         if c != A40_CLUSTER)
+    foreign = AnalyticalProvider(other_cluster)
+    assert store.load_events(foreign) == 0
+    assert foreign.cache_size == 0
+
+
+# --------------------------------------------------------------------------
+# serve: the query front-end
+# --------------------------------------------------------------------------
+
+def _queries():
+    return [ServeQuery(c.arch, c.strategy, c.global_batch, c.seq,
+                       smoke=c.smoke) for c in MATRIX]
+
+
+def test_serve_batch_matches_direct_simulate(tmp_path):
+    run_sweep(MATRIX, provider=_fresh_provider(), seeds=SEEDS,
+              store=str(tmp_path))
+    answers = DistSim.serve_batch(_queries(), str(tmp_path))
+    for q, a in zip(_queries(), answers):
+        cfg = smoke_config(get_config(q.arch)) if q.smoke \
+            else get_config(q.arch)
+        sim = DistSim(cfg, q.strategy, q.global_batch, q.seq,
+                      _fresh_provider())
+        pred = sim.simulate()
+        assert a.batch_time == float(pred.batch.batch_times[0])
+        assert a.bubble_fraction == pytest.approx(
+            float(pred.bubble_fraction()[0]), rel=1e-9)
+        assert a.utilization_mean == pytest.approx(1.0 - a.bubble_fraction)
+        assert a.throughput_tokens == pytest.approx(
+            q.global_batch * q.seq / a.batch_time)
+
+
+def test_warm_serve_performs_zero_evaluations(tmp_path):
+    run_sweep(MATRIX, provider=_fresh_provider(), seeds=SEEDS,
+              store=str(tmp_path))
+    server = DistSim.serve(str(tmp_path))
+    answers = server.answer_batch(_queries())
+    assert len(answers) == len(MATRIX)
+    snap = server.snapshot()
+    stats = snap["clusters"][A40_CLUSTER.name]
+    assert stats["evaluations"] == 0       # everything from the store
+    assert stats["unique_events"] > 0      # events WERE loaded from disk
+    assert snap["queries_answered"] == len(MATRIX)
+    # repeat traffic reuses engines + the compiled mega-batch program
+    again = server.answer_batch(_queries())
+    assert [a.batch_time for a in again] == [a.batch_time for a in answers]
+    assert snap["clusters"][A40_CLUSTER.name]["evaluations"] == 0
+
+
+def test_serve_memory_headroom_and_feasibility(tmp_path):
+    ans = DistSim.serve(str(tmp_path)).answer(
+        ServeQuery("gpt2_345m", Strategy(mp=1, pp=2, dp=2,
+                                         microbatches=4)))
+    assert ans.mem_bytes > 0
+    assert ans.hbm_headroom == pytest.approx(
+        A40_CLUSTER.chip.hbm_bytes * 0.92 - ans.mem_bytes)
+    assert ans.feasible == (ans.hbm_headroom > 0)
+    d = ans.to_dict()
+    assert d["query"]["arch"] == "gpt2_345m"
+    assert ServeQuery.from_dict(d["query"]) == ans.query
+
+
+def test_serve_unknown_cluster_raises(tmp_path):
+    server = DistSim.serve(str(tmp_path))
+    with pytest.raises(ValueError, match="unknown cluster"):
+        server.answer(ServeQuery("gpt2_345m", Strategy(),
+                                 cluster="no-such-pod"))
+
+
+# --------------------------------------------------------------------------
+# satellite regressions
+# --------------------------------------------------------------------------
+
+def test_measured_clear_cache_clears_group_cache():
+    """Regression: clear_cache() used to leave the derived jit-timing
+    cache populated, so re-profiling silently reused stale timings."""
+    p = MeasuredProvider(A40_CLUSTER)
+    p._group_cache[((64, 64, 64),)] = 1.23
+    version = p.cache_version
+    p.clear_cache()
+    assert p._group_cache == {}
+    assert p.cache_version == version + 1
+
+
+def test_run_sweep_rejects_mismatched_cluster():
+    """Regression: a cluster disagreeing with the provider's used to be
+    silently ignored — the sweep ran on different hardware than asked."""
+    other = next(c for c in CLUSTERS.values() if c != A40_CLUSTER)
+    with pytest.raises(ValueError, match="disagrees"):
+        run_sweep(SMALL, cluster=other, provider=_fresh_provider(),
+                  seeds=(0,))
+    # an AGREEING pair stays fine
+    res = run_sweep(SMALL[:1], cluster=A40_CLUSTER,
+                    provider=_fresh_provider(), seeds=(0,))
+    assert res.cluster == A40_CLUSTER.name
+
+
+def test_run_sweep_rejects_plain_cache_with_store(tmp_path):
+    p = _fresh_provider()
+    with pytest.raises(ValueError, match="plain BuildCache"):
+        run_sweep(SMALL, provider=p, seeds=(0,), cache=BuildCache(p),
+                  store=str(tmp_path))
+
+
+def test_throughput_iters_no_uninitialized_memory():
+    """Regression: np.divide(where=) without out= left masked lanes as
+    uninitialized memory instead of 0.0."""
+    bt = np.array([0.5, 0.0, 2.0])
+    sb = SimBatch(types.SimpleNamespace(batch_times=bt), 16, 128,
+                  "replay")
+    ti = sb.throughput_iters()
+    assert ti[1] == 0.0
+    assert ti[0] == 2.0 and ti[2] == 0.5
+    assert np.all(np.isfinite(sb.throughput_tokens()))
+
+
+def test_microbatch_floor_single_source():
+    """The floor formula lives ONCE, on Strategy: DistSim and the
+    BuildCache key can never drift again."""
+    strat = Strategy(mp=1, pp=2, dp=2, microbatches=4)
+    assert strat.microbatch_size(16) == 2
+    assert strat.microbatch_size(0) == 1   # the max(1, ...) floor
+    sim = DistSim(get_config("gpt2_345m"), strat, 16, 128,
+                  _fresh_provider())
+    assert sim.microbatch() == strat.microbatch_size(16)
+    assert BuildCache._microbatch(strat, 16) == strat.microbatch_size(16)
