@@ -1,0 +1,144 @@
+"""Serving-scenario benchmark + gate (CI: bench-serving job).
+
+Two parts, both over the serving matrix (prefill + decode cells for
+the VLM / SSM-hybrid / MoE families):
+
+1. **Accuracy sweep** — predict() vs multi-seed replay() for every
+   serving cell, gated at the same paper §5 thresholds as training
+   (<4% batch-time, <5% activity), with goldens under
+   ``tests/goldens/validation_serving.json``.
+2. **Serve-vs-simulate gate** — every cell is also answered through
+   ``DistSim.serve_batch`` over a profile store (the mega-batch scored
+   service path); predicted batch time and tokens/sec must be
+   BIT-IDENTICAL to the per-engine ``DistSim.simulate()`` answer, and
+   a second server over the now-warm store must reproduce them with
+   zero provider evaluations.
+
+Also prints the throughput table (prefill tokens/sec, decode
+tokens/sec, KV-cache per-device bytes) — the serving capacity-planning
+numbers the scenario axis exists to produce.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+    PYTHONPATH=src python benchmarks/bench_serving.py --update-goldens
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+from repro.core import AnalyticalProvider, get_cluster
+from repro.core.simulator import DistSim
+from repro.search.report import format_table
+from repro.store import ServeQuery
+from repro.validate import run_sweep, serving_matrix
+from repro.validate.report import (format_validation_report, save)
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
+                           "goldens", "validation_serving.json")
+
+
+def serve_gate(cells, cluster: str) -> dict:
+    """serve()/serve_batch() answers must be bit-identical to
+    per-engine simulate() for every serving cell — cold store, then
+    again from the warm store (zero evaluations)."""
+    queries = [ServeQuery(c.arch, c.strategy, global_batch=c.global_batch,
+                          seq=c.seq, smoke=c.smoke, cluster=cluster,
+                          scenario=c.scenario) for c in cells]
+    expected = []
+    for c in cells:
+        sim = DistSim(c.config(), c.strategy, c.global_batch, c.seq,
+                      AnalyticalProvider(get_cluster(cluster)),
+                      scenario=c.scenario)
+        r = sim.simulate()
+        expected.append((r.batch_time, r.throughput_tokens()))
+
+    with tempfile.TemporaryDirectory() as d:
+        store = os.path.join(d, "store")
+        cold = DistSim.serve_batch(queries, store)
+        warm_server = DistSim.serve(store)
+        warm = warm_server.answer_batch(queries)
+        snap = warm_server.snapshot()
+    evals = sum(c["evaluations"] for c in snap["clusters"].values())
+    mismatches = [
+        q.arch + "/" + q.scenario.label()
+        for q, a, w, (bt, tok) in zip(queries, cold, warm, expected)
+        if not (a.batch_time == w.batch_time == bt
+                and a.throughput_tokens == w.throughput_tokens == tok)]
+    return {"cells": len(cells), "mismatches": mismatches,
+            "warm_evaluations": evals,
+            "bit_identical": not mismatches,
+            "warm_zero_eval": evals == 0,
+            "answers": [{"label": c.label(),
+                         "batch_time": a.batch_time,
+                         "tokens_per_s": a.throughput_tokens,
+                         "kv_cache_bytes": a.kv_cache_bytes,
+                         "hbm_headroom": a.hbm_headroom}
+                        for c, a in zip(cells, cold)]}
+
+
+def throughput_table(gate: dict) -> str:
+    rows = [[a["label"], f"{a['batch_time'] * 1e3:.4f}",
+             f"{a['tokens_per_s']:.3e}", f"{a['kv_cache_bytes']:.3e}",
+             f"{a['hbm_headroom'] / 2**30:.1f}"]
+            for a in gate["answers"]]
+    return "\n".join(format_table(
+        ["cell", "step_ms", "tok/s", "kv_bytes/dev", "headroom_GiB"],
+        rows, aligns=("<", ">", ">", ">", ">")))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="the serving matrix (the default and only "
+                         "matrix for now)")
+    ap.add_argument("--seeds", default="0,1,2")
+    ap.add_argument("--cluster", default="a40-cluster")
+    ap.add_argument("--jitter", type=float, default=0.025)
+    ap.add_argument("--out", default="serving_report.json",
+                    help="report path ('' to skip writing)")
+    ap.add_argument("--update-goldens", action="store_true",
+                    help=f"rewrite {os.path.normpath(GOLDEN_PATH)}")
+    args = ap.parse_args()
+    if args.update_goldens and (
+            args.seeds != "0,1,2" or args.cluster != "a40-cluster"
+            or args.jitter != 0.025):
+        ap.error("--update-goldens pins default seeds/cluster/jitter — "
+                 "tests/test_serving.py hard-codes them")
+
+    cells = serving_matrix()
+    seeds = tuple(int(s) for s in args.seeds.split(","))
+
+    t0 = time.perf_counter()
+    result = run_sweep(cells, cluster=args.cluster, seeds=seeds,
+                       jitter_sigma=args.jitter)
+    wall = time.perf_counter() - t0
+    print(format_validation_report(result))
+    print(f"\nsweep wall time: {wall:.2f}s")
+
+    gate = serve_gate(cells, args.cluster)
+    print("\nserving throughput (predicted, serve path):")
+    print(throughput_table(gate))
+    print(f"\nserve-vs-simulate: {gate['cells']} cells, "
+          f"bit_identical={gate['bit_identical']}, "
+          f"warm_evaluations={gate['warm_evaluations']}")
+
+    if args.out:
+        save(result, args.out)
+        print(f"wrote {args.out}")
+    if args.update_goldens:
+        save(result, os.path.normpath(GOLDEN_PATH))
+        print(f"wrote {os.path.normpath(GOLDEN_PATH)}")
+
+    ok = result.passed and gate["bit_identical"] and gate["warm_zero_eval"]
+    if not ok:
+        print("FAILED:", [c.cell.label() for c in result.failures],
+              gate["mismatches"],
+              f"warm_evaluations={gate['warm_evaluations']}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -142,3 +142,13 @@ def p2p_time(nbytes: float, cluster: ClusterSpec,
     lat = (cluster.intra_latency if scope == "intra"
            else cluster.inter_latency)
     return nbytes / bw + lat
+
+
+def hbm_time(nbytes: float, cluster: ClusterSpec) -> float:
+    """HBM-bandwidth-bound streaming read (decode KV cache / SSM state).
+
+    No op_overhead term: the read overlaps the attention kernel launch
+    it feeds; the bandwidth term is the part the roofline can't hide at
+    seq=1.
+    """
+    return nbytes / cluster.chip.hbm_bw

@@ -33,7 +33,17 @@ Replay-oracle modeling fixes vs the seed polling scheduler:
 
 RNG draw order (fixed; documented so seeds stay meaningful):
 straggler speeds → per-position fwd/bwd event factors → p2p factors →
-DP-sync factors → optimizer factors → clock offsets.
+(decode only: feedback-p2p factors) → DP-sync factors → optimizer
+factors → clock offsets. Train runs never reach the decode draw, so
+pre-scenario seeds reproduce bit-identically.
+
+Scenario generalization: the engine is scenario-keyed. ``TrainStep``
+is the historical fwd+bwd pipeline (bit-identical). Serving scenarios
+(``Prefill``/``Decode``) run a forward-only schedule without gradient
+sync or optimizer; ``Decode`` additionally threads each autoregressive
+step's token feedback from the last stage back to stage 0 and applies
+per-step arrival floors (continuous batching) through the same
+dependency recurrence.
 """
 from __future__ import annotations
 
@@ -46,7 +56,8 @@ import numpy as np
 
 from repro.core.events import Event, Stage, Strategy
 from repro.core.profiler import Provider
-from repro.core.schedules import build_schedule
+from repro.core.scenario import TRAIN, Scenario
+from repro.core.schedules import build_schedule, forward_only
 from repro.core.timeline import (Activity, LazyTimeline, Timeline,
                                  TimelineBatch)
 
@@ -77,16 +88,28 @@ class EngineBuild:
     sync means whenever ``dp > 1`` so a later non-pipedream engine can
     share a build first made for pipedream; passing the engine's actual
     sync flag reproduces the historical lazy behavior exactly.
+
+    ``scenario`` keys the build (stored *stripped* — modulo decode step
+    count / arrivals, which are schedule-level): serving builds skip the
+    gradient-sync and optimizer means entirely; decode builds add the
+    token-feedback p2p mean. Class-level defaults below double as the
+    upgrade path for builds unpickled from pre-scenario stores.
     """
+
+    # unpickle compat: pre-scenario store pickles lack these attributes
+    scenario: Scenario = TRAIN
+    fb_base: float = 0.0
 
     def __init__(self, stages: Sequence[Stage], strat: Strategy,
                  provider: Provider,
-                 with_dp_sync: Optional[bool] = None):
+                 with_dp_sync: Optional[bool] = None,
+                 scenario: Scenario = TRAIN):
         self.stages = list(stages)
         cluster = provider.cluster
         pp, vpp = strat.pp, strat.vpp
         self.n_pos = len(self.stages)
         self.cache_version = provider.cache_version
+        self.scenario = scenario.stripped()
 
         # ---- per-position event means (profiled once, reused) ----
         # Python-float sequential sums keep the predict path bit-identical
@@ -115,9 +138,25 @@ class EngineBuild:
         # ---- DP-level event means per pipeline device ----
         chip = cluster.chip
         dp = strat.dp
-        want_sync = dp > 1 if with_dp_sync is None else with_dp_sync
+        train = self.scenario.is_train
+        want_sync = (dp > 1 if with_dp_sync is None else with_dp_sync)
+        want_sync = want_sync and train      # serving: no gradient sync
         self.ar_base: List[float] = []
         self.opt_base: List[float] = []
+        if not train:
+            # forward-only: no gradient sync, no optimizer step
+            self.ar_base = [0.0] * pp
+            self.opt_base = [0.0] * pp
+            self.fb_base = 0.0
+            if self.scenario.kind == "decode" and self.stages:
+                fb_bytes = getattr(self.stages[-1], "feedback_bytes", 0.0)
+                span = strat.mp * strat.pp   # last stage back to stage 0
+                fscope = ("intra" if span <= cluster.devices_per_island
+                          else "inter")
+                self.fb_base = provider.time(Event(
+                    kind="p2p", name="p2p:fb", nbytes=fb_bytes,
+                    scope=fscope))
+            return
         for d in range(pp):
             pos_list = [c * pp + d for c in range(vpp)
                         if c * pp + d < self.n_pos]
@@ -161,22 +200,39 @@ class EventFlowEngine:
     """
 
     def __init__(self, stages: Sequence[Stage], strat: Strategy,
-                 provider: Provider, build: Optional[EngineBuild] = None):
+                 provider: Provider, build: Optional[EngineBuild] = None,
+                 scenario: Optional[Scenario] = None):
         self.strat = strat
         self.provider = provider
-        pp, m, vpp = strat.pp, strat.microbatches, strat.vpp
+        if scenario is None:
+            scenario = (getattr(build, "scenario", TRAIN)
+                        if build is not None else TRAIN)
+        self.scenario = scenario
+        self._decode = scenario.kind == "decode"
+        if not scenario.is_train and strat.vpp != 1:
+            raise ValueError(
+                f"scenario {scenario.label()!r} supports vpp=1 only")
+        pp, vpp = strat.pp, strat.vpp
+        m = scenario.task_count(strat)
         self.m = m
         dp = strat.dp
-        self.sync = dp > 1 and strat.schedule != "pipedream"
+        self.sync = (dp > 1 and strat.schedule != "pipedream"
+                     and scenario.is_train)
+        self.has_opt = scenario.is_train
         if build is None:
             build = EngineBuild(stages, strat, provider,
-                                with_dp_sync=self.sync)
+                                with_dp_sync=self.sync, scenario=scenario)
         elif (len(build.stages) != len(stages)
               or any(a is not b for a, b in zip(build.stages, stages))):
             # a build for other stages would silently simulate the
             # wrong model — the engine reads ONLY build.stages
             raise ValueError("build was precomputed for different "
                              "stages than the ones passed")
+        elif getattr(build, "scenario", TRAIN) != scenario.stripped():
+            raise ValueError(
+                f"build was precomputed for scenario "
+                f"{getattr(build, 'scenario', TRAIN).label()!r}, engine "
+                f"wants {scenario.stripped().label()!r}")
         self.build = build
         self.stages = build.stages
         self.n_pos = build.n_pos
@@ -191,9 +247,14 @@ class EventFlowEngine:
         self.ar_base = (build.ar_base if self.sync
                         else [0.0] * pp)
         self.opt_base = build.opt_base
+        self.fb_base = getattr(build, "fb_base", 0.0)
+        # decode arrival floors, padded to one entry per step
+        arrivals = list(getattr(scenario, "arrivals", ()))[:m]
+        self.arrival: List[float] = arrivals + [0.0] * (m - len(arrivals))
 
         # ---- schedule task lists as flat per-device metadata ----
-        sched = build_schedule(strat.schedule, pp, m, vpp)
+        sched = (build_schedule(strat.schedule, pp, m, vpp)
+                 if scenario.is_train else forward_only(pp, m))
         self.task_isf: List[List[bool]] = []
         self.task_pos: List[List[int]] = []
         self.task_micro: List[List[int]] = []
@@ -215,6 +276,9 @@ class EventFlowEngine:
             for f, p, i in zip(isf, pos, mic):
                 if f and p < self.n_pos - 1:
                     p2p.append(f"P2P:f:s{p}:m{i}")
+                elif f and self._decode:
+                    # last stage feeds sampled tokens back to stage 0
+                    p2p.append(f"P2P:fb:m{i}")
                 elif not f and p > 0:
                     p2p.append(f"P2P:b:s{p}:m{i}")
                 else:
@@ -237,9 +301,11 @@ class EventFlowEngine:
                 clock: float):
         """All per-run random state, drawn up front.
 
-        Returns (speed(dp,pp), dur_f, dur_b, p2p_f, p2p_b, ar, opt, off)
-        where dur_* are (dp, n_pos, m), ar/opt are (dp, pp) and off is
-        (dp, pp, mp).
+        Returns (speed(dp,pp), dur_f, dur_b, p2p_f, p2p_b, fb, ar, opt,
+        off) where dur_* are (dp, n_pos, m), fb is (dp, m) — the decode
+        token-feedback p2p, zeros otherwise — ar/opt are (dp, pp) and
+        off is (dp, pp, mp). The fb draw happens only for decode
+        engines, so train RNG consumption is unchanged.
         """
         pp, m, mp = self.strat.pp, self.m, self.strat.mp
         n_pos = self.n_pos
@@ -278,6 +344,12 @@ class EventFlowEngine:
             p2p_f[:, p] = ptf * speed[:, p % pp, None]
             p2p_b[:, p] = ptb * speed[:, (p + 1) % pp, None]
 
+        fb = np.zeros((dp, m))
+        if self._decode:
+            fbase = np.full((dp, m), self.fb_base)
+            fb = _jittered(fbase, rng, jitter) if draw_jitter else fbase
+            fb = fb * speed[:, (n_pos - 1) % pp, None]
+
         ar = np.asarray(self.ar_base)[None, :] * np.ones((dp, 1))
         opt = np.asarray(self.opt_base)[None, :] * np.ones((dp, 1))
         if draw_jitter:
@@ -289,29 +361,34 @@ class EventFlowEngine:
         off = np.zeros((dp, pp, mp))
         if rng is not None and clock > 0:
             off = clock * rng.standard_normal((dp, pp, mp))
-        return speed, dur_f, dur_b, p2p_f, p2p_b, ar, opt, off
+        return speed, dur_f, dur_b, p2p_f, p2p_b, fb, ar, opt, off
 
     # ------------------------------------------------------------------
     # single-replica pipeline simulation (ready-queue over arrays)
     # ------------------------------------------------------------------
 
-    def _simulate_replica(self, dur_f, dur_b, p2p_f, p2p_b):
+    def _simulate_replica(self, dur_f, dur_b, p2p_f, p2p_b, fb=None):
         """List-schedule one DP replica's pipeline.
 
-        dur/p2p: (n_pos, m) duration lookups for THIS replica.
+        dur/p2p: (n_pos, m) duration lookups for THIS replica; fb: (m,)
+        decode token-feedback p2p durations (None for train/prefill).
         Returns (starts, ends, p2p_ends, free) — per-device lists aligned
         with the task lists; p2p_ends entries are None for tasks with no
         boundary send.
         """
         pp, n_pos = self.strat.pp, self.n_pos
+        decode = self._decode
+        arrival = self.arrival
         nan = float("nan")
         f_end = [[nan] * self.m for _ in range(n_pos)]
         arr_f = [[nan] * self.m for _ in range(n_pos)]
         arr_b = [[nan] * self.m for _ in range(n_pos)]
+        fb_arr = [nan] * self.m         # decode: step feedback arrivals
         dur_f = dur_f.tolist()
         dur_b = dur_b.tolist()
         p2p_f = p2p_f.tolist()
         p2p_b = p2p_b.tolist()
+        fb = fb.tolist() if fb is not None else None
 
         free = [0.0] * pp
         ptr = [0] * pp
@@ -329,7 +406,15 @@ class EventFlowEngine:
             i = ptr[d]
             pos, mic = self.task_pos[d][i], self.task_micro[d][i]
             if self.task_isf[d][i]:
-                ready = 0.0 if pos == 0 else arr_f[pos][mic]
+                if pos != 0:
+                    ready = arr_f[pos][mic]
+                elif not decode:
+                    ready = 0.0
+                elif mic == 0:
+                    ready = arrival[0]
+                else:
+                    fa = fb_arr[mic - 1]
+                    ready = fa if isnan(fa) else max(fa, arrival[mic])
             else:
                 ready = f_end[pos][mic]
                 if pos < n_pos - 1 and not isnan(ready):
@@ -356,6 +441,15 @@ class EventFlowEngine:
                     arr_f[pos + 1][mic] = t_arr
                     p2p_ends[d].append(t_arr)
                     try_enable((pos + 1) % pp)
+                elif decode:
+                    # token feedback to stage 0's next step; when d == 0
+                    # (pp == 1) the trailing try_enable(d) below sees it
+                    # after ptr advances
+                    t_arr = end + fb[mic]
+                    fb_arr[mic] = t_arr
+                    p2p_ends[d].append(t_arr)
+                    if d != 0:
+                        try_enable(0)
                 else:
                     p2p_ends[d].append(None)
             else:
@@ -427,10 +521,11 @@ class EventFlowEngine:
                         add(Activity(device=dev, name=f"AR:d{d}",
                                      kind="AR", start=a0 + o, end=a1 + o,
                                      stage=d))
-                    t0, t1 = opt_span(r, d)
-                    add(Activity(device=dev, name=f"OPT:d{d}",
-                                 kind="OPT", start=t0 + o, end=t1 + o,
-                                 stage=d))
+                    if self.has_opt:
+                        t0, t1 = opt_span(r, d)
+                        add(Activity(device=dev, name=f"OPT:d{d}",
+                                     kind="OPT", start=t0 + o, end=t1 + o,
+                                     stage=d))
         return acts
 
     # ------------------------------------------------------------------
@@ -445,14 +540,15 @@ class EventFlowEngine:
         noisy = (jitter_sigma > 0 or straggler_sigma > 0 or clock_sigma > 0)
         rng = (np.random.RandomState(seed)
                if seed is not None and noisy else None)
-        _, dur_f, dur_b, p2p_f, p2p_b, ar, opt, off = self._sample(
+        _, dur_f, dur_b, p2p_f, p2p_b, fb, ar, opt, off = self._sample(
             dp, rng, jitter_sigma, straggler_sigma, clock_sigma)
 
         # DP replicas are independent until the gradient sync; with zero
         # noise they are identical — simulate one, replicate analytically.
         n_sim = dp if rng is not None else 1
         reps = [self._simulate_replica(dur_f[r], dur_b[r],
-                                       p2p_f[r], p2p_b[r])
+                                       p2p_f[r], p2p_b[r],
+                                       fb[r] if self._decode else None)
                 for r in range(n_sim)]
 
         # ---- DP level: gradient sync + optimizer ----
@@ -538,9 +634,11 @@ class EventFlowEngine:
         if self._topo is not None:
             return self._topo
         pp, n_pos, m = self.strat.pp, self.n_pos, self.m
+        decode = self._decode
         f_known = [[False] * m for _ in range(n_pos)]
         af_known = [[False] * m for _ in range(n_pos)]
         ab_known = [[False] * m for _ in range(n_pos)]
+        fb_known = [False] * m
         ptr = [0] * pp
         n_tasks = [len(t) for t in self.task_isf]
         order: List[Tuple[int, int]] = []
@@ -553,7 +651,10 @@ class EventFlowEngine:
             i = ptr[d]
             pos, mic = self.task_pos[d][i], self.task_micro[d][i]
             if self.task_isf[d][i]:
-                ok = pos == 0 or af_known[pos][mic]
+                if pos == 0:
+                    ok = not decode or mic == 0 or fb_known[mic - 1]
+                else:
+                    ok = af_known[pos][mic]
             else:
                 ok = f_known[pos][mic] and (pos == n_pos - 1
                                             or ab_known[pos][mic])
@@ -573,6 +674,10 @@ class EventFlowEngine:
                 if pos < n_pos - 1:
                     af_known[pos + 1][mic] = True
                     try_enable((pos + 1) % pp)
+                elif decode:
+                    fb_known[mic] = True
+                    if d != 0:
+                        try_enable(0)
             else:
                 if pos > 0:
                     ab_known[pos - 1][mic] = True
@@ -655,15 +760,19 @@ class EventFlowEngine:
 
         durf_l, durb_l = lanes(1), lanes(2)         # (R, n_pos, m)
         p2pf_l, p2pb_l = lanes(3), lanes(4)
-        ar = np.stack([smp[5] for smp in samples])  # (S, dp, pp)
-        opt = np.stack([smp[6] for smp in samples])
-        off = np.stack([smp[7] for smp in samples])  # (S, dp, pp, mp)
+        fb_l = lanes(5)                             # (R, m)
+        ar = np.stack([smp[6] for smp in samples])  # (S, dp, pp)
+        opt = np.stack([smp[7] for smp in samples])
+        off = np.stack([smp[8] for smp in samples])  # (S, dp, pp, mp)
 
         # ---- vectorized recurrence evaluation along the topo order ----
+        decode = self._decode
+        arrival = self.arrival
         n_tasks = [len(t) for t in self.task_isf]
         f_end = np.zeros((R, n_pos, m))
         arr_f = np.zeros((R, n_pos, m))
         arr_b = np.zeros((R, n_pos, m))
+        fb_end = np.zeros((R, m))
         free = np.zeros((R, pp))
         starts = [np.zeros((R, n)) for n in n_tasks]
         ends = [np.zeros((R, n)) for n in n_tasks]
@@ -675,13 +784,27 @@ class EventFlowEngine:
             pos, mic = self.task_pos[d][i], self.task_micro[d][i]
             fr = free[:, d]                # view — read-only until below
             if self.task_isf[d][i]:
-                start = (fr if pos == 0
-                         else np.maximum(fr, arr_f[:, pos, mic]))
+                if pos != 0:
+                    start = np.maximum(fr, arr_f[:, pos, mic])
+                elif not decode:
+                    start = fr
+                elif mic == 0:
+                    start = np.maximum(fr, arrival[0])
+                else:
+                    # same max grouping as the sequential heap key:
+                    # max(free, max(feedback, arrival)) — exact either way
+                    start = np.maximum(
+                        fr, np.maximum(fb_end[:, mic - 1], arrival[mic]))
                 end = start + durf_l[:, pos, mic]
                 f_end[:, pos, mic] = end
                 if pos < n_pos - 1:
                     arr = end + p2pf_l[:, pos, mic]
                     arr_f[:, pos + 1, mic] = arr
+                    p2p_end[d][:, i] = arr
+                    last_pipe[:, d] = np.maximum(last_pipe[:, d], arr)
+                elif decode:
+                    arr = end + fb_l[:, mic]
+                    fb_end[:, mic] = arr
                     p2p_end[d][:, i] = arr
                     last_pipe[:, d] = np.maximum(last_pipe[:, d], arr)
             else:

@@ -16,7 +16,9 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig
-from repro.core.modelgraph import GEMM, LayerSpec, build_graph
+from repro.core.modelgraph import (GEMM, LayerSpec, build_decode_graph,
+                                   build_graph)
+from repro.core.scenario import TRAIN, Scenario
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +63,7 @@ class Strategy:
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    kind: str                       # compute | collective | p2p
+    kind: str                       # compute | collective | p2p | hbm
     # display-only: equality/hashing is the STRUCTURAL signature
     # (kind, op, sharded shapes, participants, scope) — the paper's
     # unique-event identity. Two stages' p2p sends of the same payload
@@ -126,6 +128,13 @@ def layer_composed_events(spec: LayerSpec, mp: int, devices_per_island: int,
             kind="collective", name=f"{spec.name}:{phase}:ep_a2a:mp{mp}",
             coll_op="all_to_all", nbytes=spec.ep_alltoall_bytes / mp,
             n_dev=mp, scope=_scope(mp, devices_per_island)))
+    if spec.kv_read_bytes:
+        # decode: KV-cache / SSM-state read from HBM (sharded with the
+        # KV heads under TP)
+        shard = mp if spec.mp_shardable else 1
+        events.append(Event(
+            kind="hbm", name=f"{spec.name}:{phase}:kv_read:mp{mp}",
+            nbytes=spec.kv_read_bytes / shard))
     return ComposedEvent(f"{spec.name}:{phase}", events)
 
 
@@ -139,6 +148,11 @@ class Stage:
     layers: List[LayerSpec]         # flattened (one entry per actual layer)
     fwd: ComposedEvent = None
     bwd: ComposedEvent = None
+    # decode: payload the LAST stage feeds back to stage 0 between
+    # autoregressive steps (sampled token ids). 0.0 for train/prefill.
+    # A class-level default so stages unpickled from pre-scenario
+    # stores read 0.0 via the class attribute.
+    feedback_bytes: float = 0.0
 
     @property
     def param_bytes(self) -> float:
@@ -149,16 +163,39 @@ class Stage:
         return self.layers[-1].act_bytes if self.layers else 0.0
 
 
-def flatten_layers(cfg: ArchConfig, microbatch: int, seq: int
-                   ) -> List[LayerSpec]:
+def flatten_layers(cfg: ArchConfig, microbatch: int, seq: int,
+                   scenario: Scenario = TRAIN,
+                   layers: List[LayerSpec] = None) -> List[LayerSpec]:
+    """Flatten the model into one entry per actual layer.
+
+    ``scenario`` selects the layer graph (train/prefill share the full-
+    sequence forward graph; decode builds the seq=1 graph with KV-read
+    terms). An explicit ``layers`` list overrides the generated graph —
+    the hook for heterogeneous per-layer configurations (non-uniform
+    widths, per-layer seq) that no ``ArchConfig`` template expresses.
+    """
+    if layers is None:
+        if scenario.kind == "decode":
+            layers = build_decode_graph(cfg, microbatch,
+                                        scenario.kv_len(seq))
+        else:
+            layers = build_graph(cfg, microbatch, seq)
     out: List[LayerSpec] = []
-    for spec in build_graph(cfg, microbatch, seq):
+    for spec in layers:
         out.extend([spec] * spec.count)
     return out
 
 
-def partition_stages(layers: List[LayerSpec], pp: int) -> List[Stage]:
-    """Balance stages by forward FLOPs (greedy prefix split)."""
+def partition_stages(layers: List[LayerSpec], pp: int,
+                     balanced: bool = False) -> List[Stage]:
+    """Balance stages by forward FLOPs (greedy prefix split).
+
+    With ``balanced=True`` every stage is guaranteed non-empty whenever
+    ``len(layers) >= pp`` (the greedy split is forced once exactly one
+    layer per remaining stage is left). The default keeps the historic
+    behaviour — tiny models may pad trailing empty stages — because
+    existing training goldens bake that in.
+    """
     total = sum(l.fwd_flops for l in layers) or 1.0
     target = total / pp
     stages: List[Stage] = []
@@ -170,7 +207,8 @@ def partition_stages(layers: List[LayerSpec], pp: int) -> List[Stage]:
         acc += l.fwd_flops
         remaining_layers = len(layers) - i - 1
         remaining_stages = pp - idx - 1
-        if (acc >= target and remaining_stages > 0
+        force = balanced and remaining_layers == remaining_stages
+        if ((acc >= target or force) and remaining_stages > 0
                 and remaining_layers >= remaining_stages):
             stages.append(Stage(idx, cur))
             idx, cur, acc = idx + 1, [], 0.0
@@ -225,7 +263,8 @@ def stage_signature(stages: List[Stage]) -> Tuple:
     return tuple(
         (tuple(st.fwd.events) if st.fwd is not None else (),
          tuple(st.bwd.events) if st.bwd is not None else (),
-         st.boundary_act_bytes, st.param_bytes)
+         st.boundary_act_bytes, st.param_bytes,
+         getattr(st, "feedback_bytes", 0.0))
         for st in stages)
 
 

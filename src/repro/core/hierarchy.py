@@ -36,23 +36,44 @@ from repro.core.events import (ComposedEvent, Stage, Strategy,
                                flatten_layers, layer_composed_events,
                                partition_stages)
 from repro.core.profiler import Provider
+from repro.core.scenario import TRAIN, Scenario
 from repro.core.timeline import Timeline
 
 
 def build_positions(cfg: ArchConfig, strat: Strategy, microbatch: int,
-                    seq: int, cluster: ClusterSpec) -> List[Stage]:
-    """Stages for pp*vpp pipeline positions (vpp virtual chunks/device)."""
-    layers = flatten_layers(cfg, microbatch, seq)
-    stages = partition_stages(layers, strat.pp * strat.vpp)
+                    seq: int, cluster: ClusterSpec,
+                    scenario: Scenario = TRAIN) -> List[Stage]:
+    """Stages for pp*vpp pipeline positions (vpp virtual chunks/device).
+
+    Serving scenarios are forward-only (``bwd`` stays an empty bundle),
+    use the *balanced* partition (an empty pipeline stage is merely
+    wasteful in training but would stall every autoregressive step in
+    decode), and — for decode — mark the last stage with the sampled-
+    token feedback payload it sends back to stage 0 between steps.
+    """
+    if scenario.is_train:
+        layers = flatten_layers(cfg, microbatch, seq)
+        stages = partition_stages(layers, strat.pp * strat.vpp)
+    else:
+        if strat.vpp != 1:
+            raise ValueError(
+                f"scenario {scenario.label()!r} supports vpp=1 only "
+                f"(got vpp={strat.vpp})")
+        layers = flatten_layers(cfg, microbatch, seq, scenario=scenario)
+        stages = partition_stages(layers, strat.pp, balanced=True)
     for st in stages:
         fwd, bwd = [], []
         for l in st.layers:
             fwd.extend(layer_composed_events(
                 l, strat.mp, cluster.devices_per_island, "fwd").events)
-            bwd.extend(layer_composed_events(
-                l, strat.mp, cluster.devices_per_island, "bwd").events)
+            if scenario.is_train:
+                bwd.extend(layer_composed_events(
+                    l, strat.mp, cluster.devices_per_island, "bwd").events)
         st.fwd = ComposedEvent(f"pos{st.index}:fwd", fwd)
         st.bwd = ComposedEvent(f"pos{st.index}:bwd", bwd)
+    if scenario.kind == "decode" and stages:
+        # sampled token ids (int32 per slot) fed back to stage 0
+        stages[-1].feedback_bytes = 4.0 * microbatch
     return stages
 
 

@@ -191,6 +191,20 @@ class MegaBatch:
         b_send = (~isf) & (pos > 0)
         send[b_send] = p2p[pos[b_send] - 1]
 
+        if getattr(eng, "_decode", False):
+            # decode: step t's stage 0 waits on step t-1's token
+            # feedback from the last stage (dep1) and its arrival floor
+            # (dep2 rides the dummy slot: 0.0 + arrival == arrival,
+            # absorbed exactly by the row max — engine bit-identity)
+            f0 = isf & (pos == 0)
+            later = f0 & (mic > 0)
+            dep1[later] = f_slot[n_pos - 1, mic[later] - 1]
+            del1[later] = eng.fb_base
+            arrival = np.asarray(eng.arrival)
+            del2[f0] = arrival[mic[f0]]
+            fb_send = isf & (pos == n_pos - 1)
+            send[fb_send] = eng.fb_base
+
         # reorder rows along this candidate's topo order: step j of the
         # program evaluates its j-th ready task
         topo = np.asarray(eng.topo_order(), dtype=np.int64)    # (n, 2)

@@ -59,6 +59,9 @@ class LayerSpec:
     # bytes exchanged all-to-all by EP per microbatch forward pass
     ep_alltoall_bytes: float = 0.0
     mp_shardable: bool = True    # False → replicated under MP (e.g. norms)
+    # decode scenario: persistent-state bytes (KV cache / SSM state)
+    # streamed from HBM per forward pass — emitted as an ``hbm`` event
+    kv_read_bytes: float = 0.0
 
     @property
     def fwd_flops(self) -> float:
@@ -240,6 +243,123 @@ def build_graph(cfg: ArchConfig, batch: int, seq: int) -> List[LayerSpec]:
     layers.append(LayerSpec("head", "head", 1,
                             (GEMM(t if not cfg.enc_dec else t // 2,
                                   cfg.vocab, d),),
+                            ("n",), head_pb, BYTES * t * 4))
+    return layers
+
+
+# --------------------------------------------------------------------------
+# decode scenario: seq=1 autoregressive graph + persistent-state memory
+# --------------------------------------------------------------------------
+
+def _kv_layer_bytes(cfg: ArchConfig, slots: int, kv_len: int) -> float:
+    """KV-cache bytes one attention layer holds (and a decode step
+    streams from HBM) for ``slots`` concurrent requests."""
+    kv = kv_len
+    if cfg.sliding_window is not None:
+        kv = min(kv, cfg.sliding_window)
+    return 2.0 * BYTES * slots * kv * cfg.n_kv_heads * cfg.head_dim
+
+
+def _ssm_state_bytes(cfg: ArchConfig, slots: int) -> float:
+    """Recurrent + conv state bytes per SSM layer (fp32 state)."""
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    return 4.0 * slots * (di * sc.d_state + sc.d_conv * (di + 2 * sc.d_state))
+
+
+def _state_layer_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    """(attention layers holding KV cache, SSM layers holding state)."""
+    if cfg.family == "ssm":
+        return 0, cfg.n_layers
+    if cfg.hybrid_period:
+        n_attn = len(cfg.attn_layer_indices())
+        return n_attn, cfg.n_layers - n_attn
+    return cfg.n_layers, 0
+
+
+def kv_cache_bytes(cfg: ArchConfig, slots: int, kv_len: int) -> float:
+    """Total persistent decode state (KV cache + SSM state) across the
+    whole model for ``slots`` concurrent requests at context ``kv_len``
+    — the serving entry in the HBM memory model."""
+    if cfg.enc_dec:
+        raise ValueError("decode state model does not cover enc_dec models")
+    n_attn, n_ssm = _state_layer_counts(cfg)
+    total = n_attn * _kv_layer_bytes(cfg, slots, kv_len)
+    if n_ssm:
+        total += n_ssm * _ssm_state_bytes(cfg, slots)
+    return total
+
+
+def build_decode_graph(cfg: ArchConfig, slots: int, kv_len: int
+                       ) -> List[LayerSpec]:
+    """Layer graph for ONE autoregressive decode step: ``slots``
+    concurrent requests, one query token each, attending to ``kv_len``
+    cached keys. Each block carries ``kv_read_bytes`` — the HBM traffic
+    of reading its KV cache / SSM state — which becomes an ``hbm``
+    event in the composed stage."""
+    if cfg.enc_dec:
+        raise ValueError("decode scenario does not support enc_dec models")
+    t = slots                       # one token per slot
+    b = slots
+    d = cfg.d_model
+    act = BYTES * t * d
+    pb = _block_params(cfg)
+    attn_pb, ssm_pb = pb["attn"], pb["ssm"]
+    ffn_pb = pb["ffn_moe"] if cfg.moe is not None else pb["ffn_dense"]
+    layers: List[LayerSpec] = []
+
+    emb_pb = BYTES * cfg.vocab * d
+    layers.append(LayerSpec("embed", "embed", 1, (), (), emb_pb, act,
+                            mp_shardable=False))
+
+    ep_bytes = 0.0
+    if cfg.moe is not None:
+        ep_bytes = 2 * BYTES * t * cfg.moe.top_k * d
+
+    if cfg.family == "ssm":
+        g, a = _ssm_gemms(cfg, t, b, 1)
+        layers.append(LayerSpec(
+            "ssm_block", "ssm", cfg.n_layers, tuple(g), a, ssm_pb, act,
+            tp_allreduce_bytes=act,
+            kv_read_bytes=_ssm_state_bytes(cfg, slots)))
+    elif cfg.hybrid_period:
+        n_attn = len(cfg.attn_layer_indices())
+        moe_b, dense_b, n_moe, _ = _ffn_layer_bytes(cfg, pb)
+        n_ssm_moe = max(0, n_moe - n_attn)
+        n_ssm_dense = cfg.n_layers - n_attn - n_ssm_moe
+        kv_rd = _kv_layer_bytes(cfg, slots, kv_len)
+        ssm_rd = _ssm_state_bytes(cfg, slots)
+        ga, aa = _attn_gemms(cfg, t, 1, b, kv_len=kv_len)
+        gf, af = _ffn_gemms(cfg, t)
+        layers.append(LayerSpec(
+            "attn_block", "attn_ffn", n_attn, tuple(ga + gf), aa + af,
+            attn_pb + moe_b, act, tp_allreduce_bytes=2 * act,
+            ep_alltoall_bytes=ep_bytes, kv_read_bytes=kv_rd))
+        gs, as_ = _ssm_gemms(cfg, t, b, 1)
+        if n_ssm_moe:
+            layers.append(LayerSpec(
+                "ssm_moe_block", "ssm", n_ssm_moe, tuple(gs + gf), as_ + af,
+                ssm_pb + moe_b, act, tp_allreduce_bytes=2 * act,
+                ep_alltoall_bytes=ep_bytes, kv_read_bytes=ssm_rd))
+        if n_ssm_dense:
+            d_ff_gemms = ([GEMM(t, cfg.d_ff, d), GEMM(t, cfg.d_ff, d),
+                           GEMM(t, d, cfg.d_ff)], ("n", "n", "k"))
+            layers.append(LayerSpec(
+                "ssm_dense_block", "ssm", n_ssm_dense,
+                tuple(gs + d_ff_gemms[0]), as_ + d_ff_gemms[1],
+                ssm_pb + dense_b, act, tp_allreduce_bytes=2 * act,
+                kv_read_bytes=ssm_rd))
+    else:
+        ga, aa = _attn_gemms(cfg, t, 1, b, kv_len=kv_len)
+        gf, af = _ffn_gemms(cfg, t)
+        layers.append(LayerSpec(
+            "block", "attn_ffn", cfg.n_layers, tuple(ga + gf), aa + af,
+            attn_pb + ffn_pb, act, tp_allreduce_bytes=2 * act,
+            ep_alltoall_bytes=ep_bytes,
+            kv_read_bytes=_kv_layer_bytes(cfg, slots, kv_len)))
+
+    head_pb = 0.0 if cfg.tie_embeddings else BYTES * d * cfg.vocab
+    layers.append(LayerSpec("head", "head", 1, (GEMM(t, cfg.vocab, d),),
                             ("n",), head_pb, BYTES * t * 4))
     return layers
 

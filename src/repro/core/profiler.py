@@ -23,8 +23,8 @@ import time
 from typing import Dict, Iterable
 
 from repro.core.costmodel import (ClusterSpec, V5E_POD, collective_time,
-                                  compute_time, p2p_time, ring_hops,
-                                  ring_volume_factor)
+                                  compute_time, hbm_time, p2p_time,
+                                  ring_hops, ring_volume_factor)
 from repro.core.events import Event
 
 
@@ -154,6 +154,9 @@ class Provider:
             # dPRO's min(SEND, RECV) rule: our model times the transmission
             # itself, which is that minimum by construction.
             return p2p_time(e.nbytes, self.cluster, e.scope)
+        if e.kind == "hbm":
+            # decode KV-cache / SSM-state read: pure HBM-bandwidth-bound
+            return hbm_time(e.nbytes, self.cluster)
         raise ValueError(e.kind)
 
     def _compute_time(self, e: Event) -> float:

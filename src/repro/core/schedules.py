@@ -74,6 +74,14 @@ def interleaved(pp: int, m: int, vpp: int) -> List[List[Task]]:
     return out
 
 
+def forward_only(pp: int, m: int) -> List[List[Task]]:
+    """Serving schedule: every stage runs the m pipelined work units
+    (prefill requests / decode steps) forward-only, in order. The
+    scenario's event graph carries the inter-unit dependencies (p2p
+    activations; decode's token feedback + arrival floors)."""
+    return [[Task("F", i) for i in range(m)] for _ in range(pp)]
+
+
 def build_schedule(name: str, pp: int, m: int, vpp: int = 1
                    ) -> List[List[Task]]:
     if name == "gpipe":

@@ -29,6 +29,7 @@ from repro.core.events import (Stage, Strategy, build_stage_events,
 from repro.core.hierarchy import build_positions
 from repro.core.profiler import (AnalyticalProvider, Provider,
                                  profile_events, profiling_cost)
+from repro.core.scenario import TRAIN, Scenario
 from repro.core.timeline import Timeline, TimelineBatch
 
 
@@ -42,14 +43,16 @@ class SimResult:
     bubble_fraction: float
 
 
-def _to_result(tl: Timeline, global_batch: int, seq: int) -> SimResult:
+def _to_result(tl: Timeline, global_batch: int, seq: int,
+               scenario: Scenario = TRAIN) -> SimResult:
     bt = tl.batch_time
     util = tl.utilization()
     return SimResult(
         timeline=tl,
         batch_time=bt,
         throughput_iters=1.0 / bt if bt else 0.0,
-        throughput_tokens=global_batch * seq / bt if bt else 0,
+        throughput_tokens=(scenario.tokens(global_batch, seq) / bt
+                           if bt else 0),
         utilization=util,
         bubble_fraction=tl.bubble_fraction(util),
     )
@@ -74,11 +77,12 @@ class SimBatch:
     """
 
     def __init__(self, batch: TimelineBatch, global_batch: int, seq: int,
-                 mode: str):
+                 mode: str, scenario: Scenario = TRAIN):
         self.batch = batch
         self.global_batch = global_batch
         self.seq = seq
         self.mode = mode                       # "predict" | "replay"
+        self.scenario = scenario
 
     def __len__(self) -> int:
         return len(self.batch)
@@ -113,7 +117,11 @@ class SimBatch:
         return np.divide(1.0, bt, out=np.zeros_like(bt), where=bt > 0)
 
     def throughput_tokens(self) -> np.ndarray:
-        return self.throughput_iters() * (self.global_batch * self.seq)
+        """Tokens/sec per lane — scenario-aware numerator (train and
+        prefill push ``global_batch * seq`` tokens per iteration;
+        decode produces one token per slot per autoregressive step)."""
+        return (self.throughput_iters()
+                * self.scenario.tokens(self.global_batch, self.seq))
 
     def utilization(self) -> np.ndarray:
         """(lanes, n_devices) busy fractions."""
@@ -128,7 +136,7 @@ class SimBatch:
     def result(self, i: int = 0) -> SimResult:
         """Lane ``i`` as the classic :class:`SimResult`."""
         return _to_result(self.batch.timeline(i), self.global_batch,
-                          self.seq)
+                          self.seq, self.scenario)
 
     def results(self) -> List[SimResult]:
         return [self.result(i) for i in range(len(self))]
@@ -143,16 +151,25 @@ def _deprecated(old: str, new: str) -> None:
 class DistSim:
     def __init__(self, cfg: ArchConfig, strategy: Strategy,
                  global_batch: int, seq: int,
-                 provider: Optional[Provider] = None):
+                 provider: Optional[Provider] = None,
+                 scenario: Scenario = TRAIN):
         self.cfg = cfg
         self.strategy = strategy
         self.global_batch = global_batch
         self.seq = seq
         self.provider = provider or AnalyticalProvider(V5E_POD)
-        self._default_engine: Optional[EventFlowEngine] = None
+        self.scenario = scenario
+        # one cached engine per scenario actually simulated, plus one
+        # slot for caller-provided positions
+        self._engines: Dict[Scenario, EventFlowEngine] = {}
         self._engine: Optional[EventFlowEngine] = None
         self._engine_key = None
-        if global_batch % (strategy.dp * strategy.microbatches):
+        if scenario.kind == "decode":
+            if global_batch % strategy.dp:
+                raise ValueError(
+                    f"global_batch {global_batch} (decode slots) not "
+                    f"divisible by dp = {strategy.dp}")
+        elif global_batch % (strategy.dp * strategy.microbatches):
             raise ValueError(
                 f"global_batch {global_batch} not divisible by "
                 f"dp*microbatches = {strategy.dp * strategy.microbatches}")
@@ -162,7 +179,8 @@ class DistSim:
                  jitter_sigma: float = 0.025,
                  straggler_sigma: float = 0.0,
                  clock_sigma: float = 0.0,
-                 positions: Optional[List[Stage]] = None) -> SimBatch:
+                 positions: Optional[List[Stage]] = None,
+                 scenario: Optional[Scenario] = None) -> SimBatch:
         """Run the model once, uniformly.
 
         ``seeds=None`` (default) is the performance model: one
@@ -171,17 +189,22 @@ class DistSim:
         of ints replays the discrete-event oracle once per seed, all
         lanes evaluated in one vectorized pass, bit-identical per seed
         to the historical sequential ``replay(seed=s)`` calls.
+
+        ``scenario`` overrides the sim's constructor scenario for this
+        call (e.g. ``sim.simulate(scenario=Decode(steps=16))`` on a sim
+        built for training).
         """
-        engine = self.engine(positions)
+        sc = self.scenario if scenario is None else scenario
+        engine = self.engine(positions, scenario=sc)
         if seeds is None:
             return SimBatch(engine.run_batched(None), self.global_batch,
-                            self.seq, "predict")
+                            self.seq, "predict", sc)
         if isinstance(seeds, (int, np.integer)):
             seeds = [int(seeds)]
         batch = engine.run_batched(
             list(seeds), jitter_sigma=jitter_sigma,
             straggler_sigma=straggler_sigma, clock_sigma=clock_sigma)
-        return SimBatch(batch, self.global_batch, self.seq, "replay")
+        return SimBatch(batch, self.global_batch, self.seq, "replay", sc)
 
     # ---- deprecated 5-method surface (thin delegating wrappers) ----
     def predict(self, positions: Optional[List[Stage]] = None) -> SimResult:
@@ -266,22 +289,26 @@ class DistSim:
             .answer_batch(queries)
 
     # ---- search-engine hooks ----
-    def microbatch(self) -> int:
-        return self.strategy.microbatch_size(self.global_batch)
+    def microbatch(self, scenario: Optional[Scenario] = None) -> int:
+        sc = self.scenario if scenario is None else scenario
+        return sc.microbatch_size(self.strategy, self.global_batch)
 
-    def positions(self) -> List[Stage]:
+    def positions(self, scenario: Optional[Scenario] = None) -> List[Stage]:
         """Pipeline positions (pp*vpp stages) with composed fwd/bwd
         events — precompute once, pass to simulate() and the search
         pruner so candidates don't rebuild the model graph."""
-        return build_positions(self.cfg, self.strategy, self.microbatch(),
-                               self.seq, self.provider.cluster)
+        sc = self.scenario if scenario is None else scenario
+        return build_positions(self.cfg, self.strategy,
+                               self.microbatch(sc), self.seq,
+                               self.provider.cluster, scenario=sc)
 
-    def engine(self, positions: Optional[List[Stage]] = None
-               ) -> EventFlowEngine:
+    def engine(self, positions: Optional[List[Stage]] = None,
+               scenario: Optional[Scenario] = None) -> EventFlowEngine:
         """Event-flow engine for this sim. Reused across simulate()
-        calls (one slot for the default positions build, one keyed on
-        the caller's positions) so the per-strategy schedule +
-        event-mean precomputation runs once per positions set.
+        calls (one slot per scenario for the default positions build,
+        one keyed on the caller's positions) so the per-strategy
+        schedule + event-mean precomputation runs once per positions
+        set.
 
         Explicit positions are keyed on STRUCTURAL content
         (:func:`repro.core.events.stage_signature`), not list identity:
@@ -289,34 +316,39 @@ class DistSim:
         mutated-then-reused list rebuilds instead of silently returning
         stale times. Either slot also rebuilds when the provider's
         event cache was cleared since the engine baked in its means."""
+        sc = self.scenario if scenario is None else scenario
         if positions is None:
-            if (self._default_engine is None
-                    or self._stale(self._default_engine)):
-                self._default_engine = EventFlowEngine(
-                    self.positions(), self.strategy, self.provider)
-            return self._default_engine
-        key = stage_signature(positions)
+            cached = self._engines.get(sc)
+            if cached is None or self._stale(cached):
+                cached = EventFlowEngine(
+                    self.positions(sc), self.strategy, self.provider,
+                    scenario=sc)
+                self._engines[sc] = cached
+            return cached
+        key = (sc, stage_signature(positions))
         if (self._engine is None or self._engine_key != key
                 or self._stale(self._engine)):
             self._engine = EventFlowEngine(positions, self.strategy,
-                                           self.provider)
+                                           self.provider, scenario=sc)
             self._engine_key = key
         return self._engine
 
     def use_engine(self, engine: EventFlowEngine) -> None:
         """Adopt a prebuilt default engine (the validate sweep's
         :class:`~repro.validate.build_cache.BuildCache` hands sims
-        cached engines so per-cell simulate() skips the build)."""
+        cached engines so per-cell simulate() skips the build). The
+        engine is slotted under ITS scenario, so a serving engine and
+        a training engine can both be adopted on one sim."""
         if engine.provider is not self.provider:
             raise ValueError("engine was built against a different "
                              "provider than this sim's")
-        self._default_engine = engine
+        self._engines[engine.scenario] = engine
 
     def _stale(self, engine: EventFlowEngine) -> bool:
         return engine.cache_version != self.provider.cache_version
 
     def _result(self, tl: Timeline) -> SimResult:
-        return _to_result(tl, self.global_batch, self.seq)
+        return _to_result(tl, self.global_batch, self.seq, self.scenario)
 
     # ---- Table 3 accounting ----
     def profiling_report(self) -> Dict[str, float]:

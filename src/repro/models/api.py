@@ -108,6 +108,29 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig,
     return {"cache": cache, "batch": batch}
 
 
+def scenario_shape(scenario, global_batch: int, seq: int) -> ShapeConfig:
+    """Bridge from the simulator's :class:`repro.core.scenario.Scenario`
+    to the model-level ShapeConfig: the scenario kind picks the input
+    contract (decode = one-token step over a KV cache of
+    ``scenario.kv_len(seq)`` positions), so the simulated event graph
+    and the executable model agree on shapes by construction."""
+    kind = scenario.kind if scenario.kind in ("train", "prefill",
+                                              "decode") else "train"
+    s = scenario.kv_len(seq) if kind == "decode" else seq
+    return ShapeConfig(name=f"{scenario.label()}_{s}", seq_len=s,
+                       global_batch=global_batch, kind=kind)
+
+
+def scenario_input_specs(cfg: ArchConfig, scenario, global_batch: int,
+                         seq: int,
+                         opts: ModelOptions = DEFAULT_OPTIONS
+                         ) -> Dict[str, Any]:
+    """``input_specs`` for a simulator scenario (see
+    :func:`scenario_shape`)."""
+    return input_specs(cfg, scenario_shape(scenario, global_batch, seq),
+                       opts)
+
+
 def make_batch(cfg: ArchConfig, shape: ShapeConfig, key: jax.Array,
                opts: ModelOptions = DEFAULT_OPTIONS) -> Dict[str, Any]:
     """Concrete random batch matching input_specs (smoke tests/examples)."""

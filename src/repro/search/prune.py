@@ -21,35 +21,55 @@ from typing import List
 
 from repro.configs.base import ArchConfig
 from repro.core.events import Stage, Strategy
+from repro.core.modelgraph import kv_cache_bytes
 from repro.core.profiler import Provider
+from repro.core.scenario import TRAIN, Scenario
 
 #: fraction of HBM usable for model state + activations
 HBM_BUDGET = 0.92
 
 
 def estimate_memory(cfg: ArchConfig, strat: Strategy, microbatch: int,
-                    seq: int) -> float:
-    """Per-device bytes: params/mp/pp x (w + grad + 2 adam fp32)
-    + activations of one microbatch per live stage."""
+                    seq: int, scenario: Scenario = TRAIN) -> float:
+    """Per-device bytes, scenario-aware.
+
+    Train: params/mp/pp x (w + grad + 2 adam fp32) + live activations
+    of one microbatch. Serving: bf16 weights only (no grads/optimizer)
+    + live activations; decode additionally holds its share of the KV
+    cache / SSM state (``microbatch`` = concurrent slots per replica,
+    sharded over mp*pp like the layers that own it).
+    """
     n = cfg.n_params()
-    state_bytes = n / (strat.mp * strat.pp) * (2 + 2 + 8 / (
-        strat.dp if strat.zero1 else 1))
-    act = 2.0 * microbatch * seq * cfg.d_model * 4   # rough live acts
+    if scenario.is_train:
+        state_bytes = n / (strat.mp * strat.pp) * (2 + 2 + 8 / (
+            strat.dp if strat.zero1 else 1))
+    else:
+        state_bytes = n / (strat.mp * strat.pp) * 2        # bf16 weights
+        if scenario.kind == "decode":
+            state_bytes += kv_cache_bytes(
+                cfg, microbatch, scenario.kv_len(seq)) / (strat.mp
+                                                          * strat.pp)
+    eff_seq = 1 if scenario.kind == "decode" else seq
+    act = 2.0 * microbatch * eff_seq * cfg.d_model * 4   # rough live acts
     return state_bytes + act
 
 
 def memory_feasible(cfg: ArchConfig, strat: Strategy, microbatch: int,
-                    seq: int, hbm_bytes: float) -> bool:
-    return estimate_memory(cfg, strat, microbatch, seq) \
+                    seq: int, hbm_bytes: float,
+                    scenario: Scenario = TRAIN) -> bool:
+    return estimate_memory(cfg, strat, microbatch, seq, scenario) \
         < hbm_bytes * HBM_BUDGET
 
 
 def hbm_headroom(cfg: ArchConfig, strat: Strategy, microbatch: int,
-                 seq: int, hbm_bytes: float) -> float:
+                 seq: int, hbm_bytes: float,
+                 scenario: Scenario = TRAIN) -> float:
     """Free HBM after model state + activations — one of the Pareto
-    objectives (more headroom = larger future batches / longer seqs)."""
+    objectives (more headroom = larger future batches / longer seqs;
+    for decode, more concurrent slots / longer contexts)."""
     return hbm_bytes * HBM_BUDGET - estimate_memory(cfg, strat,
-                                                    microbatch, seq)
+                                                    microbatch, seq,
+                                                    scenario)
 
 
 def work_lower_bound(positions: List[Stage], strat: Strategy,

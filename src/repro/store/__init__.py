@@ -17,14 +17,15 @@ in-process runs (differential tests in ``tests/test_store.py``).
 """
 from repro.store.persistent import PersistentBuildCache
 from repro.store.profile_store import (FORMAT_VERSION, ProfileStore,
-                                       StoreStats, event_from_dict,
-                                       event_key, event_to_dict,
-                                       open_store, provider_namespace)
+                                       StoreStats, build_key_json,
+                                       event_from_dict, event_key,
+                                       event_to_dict, open_store,
+                                       provider_namespace)
 from repro.store.serve import ServeAnswer, ServeQuery, StrategyServer
 
 __all__ = [
-    "FORMAT_VERSION", "ProfileStore", "StoreStats", "event_from_dict",
-    "event_key", "event_to_dict", "open_store", "provider_namespace",
-    "PersistentBuildCache", "ServeAnswer", "ServeQuery",
-    "StrategyServer",
+    "FORMAT_VERSION", "ProfileStore", "StoreStats", "build_key_json",
+    "event_from_dict", "event_key", "event_to_dict", "open_store",
+    "provider_namespace", "PersistentBuildCache", "ServeAnswer",
+    "ServeQuery", "StrategyServer",
 ]

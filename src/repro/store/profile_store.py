@@ -98,13 +98,22 @@ def event_key(e: Event) -> str:
 
 def build_key_json(key: Tuple) -> str:
     """Canonical JSON of a BuildCache build key
-    ``(cfg, stripped strategy, microbatch, seq)`` — dataclasses are
-    lowered with ``asdict`` so the address is content, not object
-    identity."""
-    cfg, strat, microbatch, seq = key
-    return _canon({"cfg": dataclasses.asdict(cfg),
-                   "strategy": dataclasses.asdict(strat),
-                   "microbatch": int(microbatch), "seq": int(seq)})
+    ``(cfg, stripped strategy, microbatch, seq[, scenario])`` —
+    dataclasses are lowered with ``asdict`` so the address is content,
+    not object identity. The scenario entry is OMITTED for the train
+    scenario (and legacy 4-tuples), so every pre-scenario store address
+    keeps serving warm training builds unchanged."""
+    if len(key) == 4:
+        cfg, strat, microbatch, seq = key
+        scenario = None
+    else:
+        cfg, strat, microbatch, seq, scenario = key
+    d = {"cfg": dataclasses.asdict(cfg),
+         "strategy": dataclasses.asdict(strat),
+         "microbatch": int(microbatch), "seq": int(seq)}
+    if scenario is not None and not scenario.is_train:
+        d["scenario"] = scenario.to_dict()
+    return _canon(d)
 
 
 def provider_namespace(provider: Provider) -> str:
@@ -256,13 +265,23 @@ class ProfileStore:
     def save_build(self, provider: Provider, key: Tuple,
                    build: EngineBuild) -> bool:
         """Persist one :class:`EngineBuild` under its content address.
-        Skips (returns False) if an entry already exists — builds are
-        deterministic per key, so the incumbent is identical."""
+        Skips (returns False) if a LIVE entry already exists — builds
+        are deterministic per (key, cache_version), so that incumbent
+        is identical. A stale-version or corrupt incumbent (unusable by
+        any current reader) is overwritten, not kept."""
         kj = build_key_json(key)
         path = os.path.join(self._builds_dir(provider),
                             _sha(kj) + ".pkl")
         if os.path.exists(path):
-            return False
+            try:
+                with open(path, "rb") as f:
+                    old = pickle.load(f)
+                if (old["format"] == FORMAT_VERSION
+                        and old["cache_version"]
+                        == provider.cache_version):
+                    return False
+            except Exception:
+                pass
         doc = {"format": FORMAT_VERSION,
                "cache_version": provider.cache_version,
                "key": kj, "build": build}
@@ -299,6 +318,129 @@ class ProfileStore:
             return None
         self.stats.builds_loaded += 1
         return build
+
+    # ---- garbage collection / compaction ----
+
+    def gc(self, provider: Optional[Provider] = None) -> Dict[str, int]:
+        """Compact the store in place.
+
+        Per namespace: merge every LIVE event shard (format matches,
+        ``cache_version`` matches the live version) into ONE
+        content-addressed shard, then delete all other shards —
+        including stale-version orphans left behind by
+        ``clear_cache()`` bumps and corrupt/truncated files. Build
+        pickles are validated the same way; stale or corrupt ones are
+        deleted, live ones stay (they are already one file per key).
+
+        The live version is ``provider.cache_version`` when a provider
+        is given (its namespace only); otherwise, per namespace, the
+        HIGHEST version present in any valid shard or build — the most
+        recent writer wins, exactly matching what a current reader
+        would accept.
+
+        Idempotent, and atomic per write: a crash mid-gc leaves only
+        valid content-addressed files. Returns a stats dict.
+        """
+        if provider is not None:
+            namespaces = [provider_namespace(provider)]
+        else:
+            namespaces = sorted(
+                fn for fn in os.listdir(self.path)
+                if os.path.isdir(os.path.join(self.path, fn)))
+        out = {"namespaces": 0, "shards_before": 0, "shards_after": 0,
+               "events_live": 0, "events_dropped": 0,
+               "builds_kept": 0, "builds_dropped": 0}
+        for ns in namespaces:
+            ns_dir = os.path.join(self.path, ns)
+            if not os.path.isdir(ns_dir):
+                continue
+            out["namespaces"] += 1
+            ev_dir = os.path.join(ns_dir, "events")
+            b_dir = os.path.join(ns_dir, "builds")
+
+            # pass 1: parse everything, find the live version
+            shards = []          # (filename, version, rows) for valid
+            bad_shards = []
+            if os.path.isdir(ev_dir):
+                for fn in sorted(os.listdir(ev_dir)):
+                    if not fn.endswith(".json"):
+                        continue
+                    out["shards_before"] += 1
+                    try:
+                        with open(os.path.join(ev_dir, fn), "rb") as f:
+                            doc = json.loads(f.read().decode())
+                        if doc["format"] != FORMAT_VERSION:
+                            raise ValueError("format")
+                        rows = [{**event_to_dict(event_from_dict(r)),
+                                 "t": float(r["t"])}
+                                for r in doc["events"]]
+                        shards.append((fn, doc["cache_version"], rows))
+                    except Exception:
+                        bad_shards.append(fn)
+            builds = []          # (filename, version) for valid
+            bad_builds = []
+            if os.path.isdir(b_dir):
+                for fn in sorted(os.listdir(b_dir)):
+                    if not fn.endswith(".pkl"):
+                        continue
+                    try:
+                        with open(os.path.join(b_dir, fn), "rb") as f:
+                            doc = pickle.load(f)
+                        if (doc["format"] != FORMAT_VERSION
+                                or _sha(doc["key"]) + ".pkl" != fn
+                                or not isinstance(doc["build"],
+                                                  EngineBuild)):
+                            raise ValueError("corrupt")
+                        builds.append((fn, doc["cache_version"]))
+                    except Exception:
+                        bad_builds.append(fn)
+            if provider is not None:
+                live = provider.cache_version
+            else:
+                versions = ([v for _, v, _ in shards]
+                            + [v for _, v in builds])
+                live = max(versions, default=0)
+
+            # pass 2: rewrite live events as one shard (union,
+            # first-sorted-shard incumbent wins — the merge_cache rule)
+            merged: Dict[str, Dict] = {}
+            for _, v, rows in shards:
+                if v != live:
+                    continue
+                for r in rows:
+                    k = _canon({k2: v2 for k2, v2 in r.items()
+                                if k2 not in ("name", "t")})
+                    merged.setdefault(k, r)
+            keep = None
+            if merged:
+                rows = sorted(merged.values(), key=lambda r: _canon(r))
+                doc = {"format": FORMAT_VERSION, "cache_version": live,
+                       "events": rows}
+                payload = _canon(doc)
+                keep = _sha(payload) + ".json"
+                self._atomic_write(os.path.join(ev_dir, keep),
+                                   payload.encode())
+                out["shards_after"] += 1
+                out["events_live"] += len(rows)
+            total = sum(len(rows) for _, v, rows in shards)
+            out["events_dropped"] += total - len(merged)
+
+            # pass 3: delete everything superseded
+            for fn, _, _ in shards:
+                if fn != keep:
+                    os.unlink(os.path.join(ev_dir, fn))
+            for fn in bad_shards:
+                os.unlink(os.path.join(ev_dir, fn))
+            for fn, v in builds:
+                if v == live:
+                    out["builds_kept"] += 1
+                else:
+                    out["builds_dropped"] += 1
+                    os.unlink(os.path.join(b_dir, fn))
+            for fn in bad_builds:
+                out["builds_dropped"] += 1
+                os.unlink(os.path.join(b_dir, fn))
+        return out
 
     # ---- accounting ----
 

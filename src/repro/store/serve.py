@@ -29,7 +29,9 @@ from repro.configs.base import get_config, smoke_config
 from repro.core.costmodel import A40_CLUSTER, CLUSTERS, ClusterSpec
 from repro.core.events import Strategy
 from repro.core.megabatch import MegaBatch
+from repro.core.modelgraph import kv_cache_bytes
 from repro.core.profiler import AnalyticalProvider
+from repro.core.scenario import TRAIN, Scenario, scenario_from_dict
 from repro.search.prune import HBM_BUDGET, estimate_memory
 from repro.store.persistent import PersistentBuildCache
 from repro.store.profile_store import ProfileStore, open_store
@@ -37,23 +39,29 @@ from repro.store.profile_store import ProfileStore, open_store
 
 @dataclasses.dataclass(frozen=True)
 class ServeQuery:
-    """One capacity-planning question."""
+    """One capacity-planning question — training by default, serving
+    when ``scenario`` is a :class:`~repro.core.scenario.Prefill` or
+    :class:`~repro.core.scenario.Decode` (then ``global_batch`` is the
+    concurrent request count and tokens/sec is decode throughput)."""
     arch: str
     strategy: Strategy
     global_batch: int = 16
     seq: int = 512
     smoke: bool = False                    # reduce arch via smoke_config
     cluster: str = A40_CLUSTER.name       # registry name
+    scenario: Scenario = TRAIN
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
         d["strategy"] = self.strategy.to_dict()
+        d["scenario"] = self.scenario.to_dict()
         return d
 
     @classmethod
     def from_dict(cls, d: Dict) -> "ServeQuery":
         d = dict(d)
         d["strategy"] = Strategy.from_dict(d["strategy"])
+        d["scenario"] = scenario_from_dict(d.get("scenario"))
         from repro.core.serde import dataclass_from_dict
         return dataclass_from_dict(cls, d)
 
@@ -70,6 +78,7 @@ class ServeAnswer:
     feasible: bool              # fits in the HBM budget
     utilization_mean: float     # mean busy fraction across devices
     bubble_fraction: float
+    kv_cache_bytes: float = 0.0  # per-device KV/SSM state (decode only)
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -148,11 +157,16 @@ class StrategyServer:
             for i in idxs:
                 q = queries[i]
                 cfg = self._resolve_cfg(q)
-                micro = q.strategy.microbatch_size(q.global_batch)
-                mem = estimate_memory(cfg, q.strategy, micro, q.seq)
+                sc = q.scenario
+                micro = sc.microbatch_size(q.strategy, q.global_batch)
+                mem = estimate_memory(cfg, q.strategy, micro, q.seq, sc)
+                kv = 0.0
+                if sc.kind == "decode":
+                    kv = kv_cache_bytes(cfg, micro, sc.kv_len(q.seq)) \
+                        / (q.strategy.mp * q.strategy.pp)
                 eng = bc.engine_for_cfg(cfg, q.strategy,
-                                        q.global_batch, q.seq)
-                meta.append((i, q, mem, budget - mem))
+                                        q.global_batch, q.seq, sc)
+                meta.append((i, q, mem, budget - mem, kv))
                 engines.append(eng)
 
             # engine objects are stable across repeat queries (the
@@ -167,18 +181,19 @@ class StrategyServer:
                     self._programs.popitem(last=False)
             pred = mb.predict(self.backend)
 
-            for lane, (i, q, mem, headroom) in enumerate(meta):
+            for lane, (i, q, mem, headroom, kv) in enumerate(meta):
                 bt = float(pred.batch_times[lane])
                 bubble = float(pred.bubble_fractions[lane])
                 answers[i] = ServeAnswer(
                     query=q, batch_time=bt,
                     throughput_iters=1.0 / bt if bt else 0.0,
-                    throughput_tokens=(q.global_batch * q.seq / bt
-                                       if bt else 0.0),
+                    throughput_tokens=(
+                        q.scenario.tokens(q.global_batch, q.seq) / bt
+                        if bt else 0.0),
                     mem_bytes=mem, hbm_headroom=headroom,
                     feasible=headroom > 0,
                     utilization_mean=1.0 - bubble,
-                    bubble_fraction=bubble)
+                    bubble_fraction=bubble, kv_cache_bytes=kv)
             bc.flush()          # persist any cold-profiled events
         self.queries_answered += len(queries)
         assert all(a is not None for a in answers)

@@ -21,12 +21,13 @@ from repro.validate.report import (dump, dumps, format_validation_report,
                                    load, load_path, save)
 from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
                                   ValidationCell, full_matrix, run_cell,
-                                  run_sweep, smoke_matrix)
+                                  run_sweep, serving_matrix, smoke_matrix)
 
 __all__ = [
     "BuildCache", "BuildCacheStats", "CellMetrics", "aggregate",
     "compare_batch", "compare_timelines", "dump", "dumps",
     "format_validation_report", "load", "load_path", "save",
     "CellResult", "SweepResult", "Thresholds", "ValidationCell",
-    "full_matrix", "run_cell", "run_sweep", "smoke_matrix",
+    "full_matrix", "run_cell", "run_sweep", "serving_matrix",
+    "smoke_matrix",
 ]

@@ -37,6 +37,7 @@ from repro.core.engine import EngineBuild, EventFlowEngine
 from repro.core.events import Stage, Strategy
 from repro.core.hierarchy import build_positions
 from repro.core.profiler import Provider
+from repro.core.scenario import TRAIN, Scenario
 
 
 @dataclasses.dataclass
@@ -106,10 +107,11 @@ class BuildCache:
             self.stats.invalidations += 1
 
     @staticmethod
-    def _microbatch(strat: Strategy, global_batch: int) -> int:
-        # delegate to the ONE shared floor formula (Strategy) so this
-        # cache key can never drift from DistSim.microbatch()
-        return strat.microbatch_size(global_batch)
+    def _microbatch(strat: Strategy, global_batch: int,
+                    scenario: Scenario = TRAIN) -> int:
+        # delegate to the ONE shared derivation (Scenario → Strategy)
+        # so this cache key can never drift from DistSim.microbatch()
+        return scenario.microbatch_size(strat, global_batch)
 
     @staticmethod
     def _resolve(arch: str, smoke: bool) -> ArchConfig:
@@ -123,23 +125,27 @@ class BuildCache:
     # config collapse to one entry.
 
     def positions_for(self, cfg: ArchConfig, strat: Strategy,
-                      microbatch: int, seq: int) -> List[Stage]:
+                      microbatch: int, seq: int,
+                      scenario: Scenario = TRAIN) -> List[Stage]:
         self._check_version()
-        key = (cfg, strat.mp, strat.pp, strat.vpp, microbatch, seq)
+        sc = scenario.stripped()
+        key = (cfg, strat.mp, strat.pp, strat.vpp, microbatch, seq, sc)
         hit = self._positions.get(key)
         if hit is not None:
             self.stats.positions_hits += 1
             return hit
         self.stats.positions_misses += 1
         pos = build_positions(cfg, strat, microbatch, seq,
-                              self.provider.cluster)
+                              self.provider.cluster, scenario=sc)
         self._positions[key] = pos
         return pos
 
     def build_for(self, cfg: ArchConfig, strat: Strategy,
-                  microbatch: int, seq: int) -> EngineBuild:
+                  microbatch: int, seq: int,
+                  scenario: Scenario = TRAIN) -> EngineBuild:
         self._check_version()
-        key = (cfg, _strip_schedule(strat), microbatch, seq)
+        sc = scenario.stripped()
+        key = (cfg, _strip_schedule(strat), microbatch, seq, sc)
         hit = self._builds.get(key)
         if hit is not None:
             self.stats.build_hits += 1
@@ -150,10 +156,11 @@ class BuildCache:
             self.stats.build_hits += 1
             return ext
         self.stats.build_misses += 1
-        pos = self.positions_for(cfg, strat, microbatch, seq)
+        pos = self.positions_for(cfg, strat, microbatch, seq, sc)
         # with_dp_sync=None: precompute sync means whenever dp > 1 so
         # pipedream and the syncing schedules share one build
-        build = EngineBuild(pos, strat, self.provider, with_dp_sync=None)
+        build = EngineBuild(pos, strat, self.provider, with_dp_sync=None,
+                            scenario=sc)
         self._builds[key] = build
         self._build_created(key, build)
         return build
@@ -168,42 +175,49 @@ class BuildCache:
         pass
 
     def engine_for_cfg(self, cfg: ArchConfig, strat: Strategy,
-                       global_batch: int, seq: int) -> EventFlowEngine:
+                       global_batch: int, seq: int,
+                       scenario: Scenario = TRAIN) -> EventFlowEngine:
         self._check_version()
-        micro = self._microbatch(strat, global_batch)
-        key = (cfg, strat, micro, seq)
+        micro = self._microbatch(strat, global_batch, scenario)
+        # engines key on the FULL scenario (decode step count/arrivals
+        # are schedule-level); builds/positions on the stripped one
+        key = (cfg, strat, micro, seq, scenario)
         hit = self._engines.get(key)
         if hit is not None:
             self.stats.engine_hits += 1
             return hit
         self.stats.engine_misses += 1
-        build = self.build_for(cfg, strat, micro, seq)
+        build = self.build_for(cfg, strat, micro, seq, scenario)
         eng = EventFlowEngine(build.stages, strat, self.provider,
-                              build=build)
+                              build=build, scenario=scenario)
         self._engines[key] = eng
         return eng
 
     # ---- registry-name surface (validation sweep cells) ----
 
     def positions(self, arch: str, smoke: bool, strat: Strategy,
-                  microbatch: int, seq: int) -> List[Stage]:
+                  microbatch: int, seq: int,
+                  scenario: Scenario = TRAIN) -> List[Stage]:
         return self.positions_for(self._resolve(arch, smoke), strat,
-                                  microbatch, seq)
+                                  microbatch, seq, scenario)
 
     def build(self, arch: str, smoke: bool, strat: Strategy,
-              microbatch: int, seq: int) -> EngineBuild:
+              microbatch: int, seq: int,
+              scenario: Scenario = TRAIN) -> EngineBuild:
         return self.build_for(self._resolve(arch, smoke), strat,
-                              microbatch, seq)
+                              microbatch, seq, scenario)
 
     def engine(self, arch: str, smoke: bool, strat: Strategy,
-               global_batch: int, seq: int) -> EventFlowEngine:
+               global_batch: int, seq: int,
+               scenario: Scenario = TRAIN) -> EventFlowEngine:
         return self.engine_for_cfg(self._resolve(arch, smoke), strat,
-                                   global_batch, seq)
+                                   global_batch, seq, scenario)
 
     def engine_for(self, cell) -> EventFlowEngine:
         """Engine for a :class:`repro.validate.sweep.ValidationCell`."""
         return self.engine(cell.arch, cell.smoke, cell.strategy,
-                           cell.global_batch, cell.seq)
+                           cell.global_batch, cell.seq,
+                           getattr(cell, "scenario", TRAIN))
 
     # ------------------------------------------------------------------
 

@@ -14,6 +14,7 @@ import math
 from typing import Dict, Union
 
 from repro.core.events import Strategy
+from repro.core.scenario import scenario_from_dict
 from repro.search.report import format_table
 from repro.validate.metrics import CellMetrics
 from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
@@ -43,7 +44,7 @@ def _dec_metrics(d: Dict) -> Dict[str, float]:
 
 
 def _cell_dict(c: CellResult) -> Dict:
-    return {
+    d = {
         "label": c.cell.label(),
         "arch": c.cell.arch,
         "smoke": c.cell.smoke,
@@ -59,13 +60,19 @@ def _cell_dict(c: CellResult) -> Dict:
         "violations": list(c.violations),
         "passed": c.passed,
     }
+    # scenario key only for serving cells: training reports/goldens
+    # stay byte-identical to the pre-scenario schema
+    if not c.cell.scenario.is_train:
+        d["scenario"] = c.cell.scenario.to_dict()
+    return d
 
 
 def _cell_from_dict(d: Dict) -> CellResult:
     cell = ValidationCell(
         arch=d["arch"], strategy=Strategy.from_dict(d["strategy"]),
         global_batch=d["global_batch"], seq=d["seq"],
-        smoke=d["smoke"], xfail=d["xfail"])
+        smoke=d["smoke"], xfail=d["xfail"],
+        scenario=scenario_from_dict(d.get("scenario")))
     return CellResult(
         cell=cell,
         metrics=CellMetrics.from_dict(_dec_metrics(d["metrics"])),

@@ -20,6 +20,7 @@ from repro.configs.base import get_config, smoke_config
 from repro.core.costmodel import A40_CLUSTER, ClusterSpec, get_cluster
 from repro.core.events import Strategy
 from repro.core.profiler import AnalyticalProvider, Provider
+from repro.core.scenario import TRAIN, Decode, Prefill, Scenario
 from repro.core.serde import dataclass_from_dict
 from repro.core.simulator import DistSim
 from repro.validate.build_cache import BuildCache
@@ -63,18 +64,23 @@ class Thresholds:
 
 @dataclasses.dataclass(frozen=True)
 class ValidationCell:
-    """One sweep point: a model config under one hybrid strategy."""
+    """One sweep point: a model config under one hybrid strategy, in
+    one scenario (training step by default; prefill/decode cells gate
+    the serving event graphs against the same replay oracle)."""
     arch: str
     strategy: Strategy
     global_batch: int = 16
     seq: int = 512
     smoke: bool = False               # reduce the arch via smoke_config
     xfail: str = ""                   # known-bad reason; reported, not gated
+    scenario: Scenario = TRAIN
 
     def label(self) -> str:
         arch = self.arch + ("~smoke" if self.smoke else "")
-        return (f"{arch}/{self.strategy.label()}"
-                f"/{self.strategy.schedule}:m{self.strategy.microbatches}"
+        sched = (f"/{self.strategy.schedule}:m{self.strategy.microbatches}"
+                 if self.scenario.is_train
+                 else f"/{self.scenario.label()}")
+        return (f"{arch}/{self.strategy.label()}" + sched
                 + (f":v{self.strategy.vpp}" if self.strategy.vpp > 1 else ""))
 
     def config(self):
@@ -129,11 +135,12 @@ class SweepResult:
 # --------------------------------------------------------------------------
 
 def _cell(arch, mp, pp, dp, m, schedule, vpp=1, gb=16, seq=512,
-          smoke=False, xfail="") -> ValidationCell:
+          smoke=False, xfail="", scenario=TRAIN) -> ValidationCell:
     return ValidationCell(
         arch, Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
                        schedule=schedule, vpp=vpp),
-        global_batch=gb, seq=seq, smoke=smoke, xfail=xfail)
+        global_batch=gb, seq=seq, smoke=smoke, xfail=xfail,
+        scenario=scenario)
 
 
 def smoke_matrix() -> List[ValidationCell]:
@@ -156,6 +163,29 @@ def smoke_matrix() -> List[ValidationCell]:
         _cell("qwen3_moe_30b_a3b", 2, 2, 1, 4, "1f1b", smoke=True),
         _cell("qwen3_moe_30b_a3b", 1, 2, 2, 4, "gpipe", smoke=True),
     ]
+
+
+def serving_matrix() -> List[ValidationCell]:
+    """Serving-scenario gate: prefill + decode cells for the three
+    serving-relevant families (VLM, SSM/attention hybrid, fine-grained
+    MoE), smoke-reduced, gated at the same <4%/<5% thresholds as
+    training. Decode cells include a continuous-batching variant
+    (staggered per-slot arrivals) and a long-context KV read."""
+    out: List[ValidationCell] = []
+    for arch in ("qwen2_vl_72b", "jamba_v0_1_52b", "qwen3_moe_30b_a3b"):
+        out.append(_cell(arch, 2, 2, 1, 4, "1f1b", gb=8, smoke=True,
+                         scenario=Prefill()))
+        out.append(_cell(arch, 1, 2, 2, 4, "1f1b", gb=8, smoke=True,
+                         scenario=Decode(steps=8)))
+    # continuous batching: slots arrive staggered mid-flight
+    out.append(_cell("qwen3_moe_30b_a3b", 1, 2, 2, 4, "1f1b", gb=8,
+                     smoke=True,
+                     scenario=Decode(steps=6,
+                                     arrivals=(0.0, 1e-4, 2e-4))))
+    # long-context decode: KV read term dominates per-step time
+    out.append(_cell("qwen2_vl_72b", 1, 1, 4, 2, "1f1b", gb=8,
+                     smoke=True, scenario=Decode(steps=4, context=4096)))
+    return out
 
 
 def full_matrix() -> List[ValidationCell]:
@@ -217,7 +247,8 @@ def run_cell(cell: ValidationCell, provider: Provider,
     """
     thresholds = thresholds or Thresholds()
     sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
-                  cell.seq, provider)
+                  cell.seq, provider,
+                  scenario=getattr(cell, "scenario", TRAIN))
     if cache is not None:
         sim.use_engine(cache.engine_for(cell))
     if batched:

@@ -1,0 +1,224 @@
+"""Serving-scenario gate: Prefill/Decode event graphs through the same
+predict-vs-replay machinery as training, serve()/serve_batch() answers
+bit-identical to per-engine simulate() (including from a warm store in
+a fresh process), and the scenario serde/content-address surfaces.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import repro.core  # noqa: F401  — establishes the package import order
+from repro.core import A40_CLUSTER, AnalyticalProvider, DistSim
+from repro.core.modelgraph import kv_cache_bytes
+from repro.core.scenario import (TRAIN, Decode, Prefill, Scenario,
+                                 TrainStep, scenario_from_dict)
+from repro.core.events import Strategy
+from repro.store import ServeQuery
+from repro.validate import (CellMetrics, run_sweep, serving_matrix,
+                            smoke_matrix)
+from repro.validate.report import dump, dumps, load, load_path
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "validation_serving.json")
+MATRIX = serving_matrix()
+SEEDS = (0, 1, 2)
+
+
+def _provider():
+    return AnalyticalProvider(A40_CLUSTER)
+
+
+# --------------------------------------------------------------------------
+# scenario objects: serde, hashing, derivation hooks
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sc", [
+    TRAIN, TrainStep(), Prefill(), Decode(),
+    Decode(steps=4, context=4096),
+    Decode(steps=3, arrivals=(0.0, 1e-4, 2e-4)),
+])
+def test_scenario_roundtrip(sc):
+    back = scenario_from_dict(json.loads(json.dumps(sc.to_dict())))
+    assert back == sc
+    assert hash(back) == hash(sc)
+
+
+def test_scenario_from_dict_defaults_and_errors():
+    assert scenario_from_dict(None) == TRAIN     # pre-scenario reports
+    assert scenario_from_dict(Decode()) == Decode()
+    with pytest.raises(ValueError, match="unknown scenario kind"):
+        scenario_from_dict({"kind": "finetune"})
+    with pytest.raises(ValueError, match="steps"):
+        Decode(steps=0)
+
+
+def test_scenario_derivation_hooks():
+    strat = Strategy(mp=1, pp=2, dp=2, microbatches=4)
+    assert TRAIN.microbatch_size(strat, 16) == 2   # gb/(dp*m)
+    assert TRAIN.task_count(strat) == 4
+    assert TRAIN.kv_len(512) == 0
+    d = Decode(steps=8, context=4096, arrivals=(0.0, 1e-4))
+    assert d.microbatch_size(strat, 16) == 8       # slots = gb/dp
+    assert d.task_count(strat) == 8
+    assert d.tokens(16, 512) == 16 * 8             # one token/slot/step
+    assert d.kv_len(512) == 4096
+    assert Decode(steps=8).kv_len(512) == 512
+    # stripped: what an EngineBuild (and its store address) depends on
+    assert d.stripped() == Decode(steps=1, context=4096)
+    assert Prefill().stripped() == Prefill()
+    assert d.label() == "decode8@4096"
+
+
+def test_engine_rejects_mismatched_scenario():
+    """A build compiled for decode cannot silently serve a train
+    engine (the event means differ) — the engine refuses."""
+    from repro.core.engine import EngineBuild, EventFlowEngine
+    cell = next(c for c in MATRIX if c.scenario.kind == "decode")
+    provider = _provider()
+    sim = DistSim(cell.config(), cell.strategy, cell.global_batch,
+                  cell.seq, provider, scenario=cell.scenario)
+    build = EngineBuild(sim.positions(), cell.strategy, provider,
+                        scenario=cell.scenario)
+    with pytest.raises(ValueError):
+        EventFlowEngine(build.stages, cell.strategy, provider,
+                        build=build, scenario=TRAIN)
+
+
+# --------------------------------------------------------------------------
+# accuracy: the serving matrix gates at the paper thresholds + goldens
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sweep():
+    return run_sweep(MATRIX, cluster=A40_CLUSTER, seeds=SEEDS)
+
+
+@pytest.mark.parametrize("label", [c.label() for c in MATRIX])
+def test_serving_cell_within_paper_targets(sweep, label):
+    res = {c.cell.label(): c for c in sweep.cells}[label]
+    m = res.metrics
+    assert m.batch_time_error <= 0.04, (label, m.batch_time_error)
+    assert m.activity_error_max <= 0.05, (label, m.activity_error_max)
+    assert res.passed, (label, res.violations)
+
+
+def test_serving_goldens_match(sweep):
+    golden = load_path(GOLDEN)
+    assert golden.passed
+    cur = {c.cell.label(): c for c in sweep.cells}
+    gold = {c.cell.label(): c for c in golden.cells}
+    assert set(cur) == set(gold)
+    for label, g in gold.items():
+        c = cur[label]
+        assert c.cell == g.cell          # incl. the scenario field
+        assert c.pred_batch_time == g.pred_batch_time
+        assert c.replay_batch_times == g.replay_batch_times
+        for f in dataclasses.fields(CellMetrics):
+            assert getattr(c.metrics, f.name) == pytest.approx(
+                getattr(g.metrics, f.name), rel=1e-6, abs=1e-9), \
+                (label, f.name)
+
+
+def test_serving_report_roundtrip(sweep):
+    assert load(dump(sweep)) == sweep
+    assert load(dumps(sweep)) == sweep
+
+
+def test_training_report_has_no_scenario_key():
+    """Training cells must serialize exactly as before the scenario
+    axis existed — the committed training goldens stay byte-valid."""
+    res = run_sweep(smoke_matrix()[:1], cluster=A40_CLUSTER, seeds=(0,))
+    d = dump(res)
+    assert "scenario" not in d["cells"][0]
+    sd = dump(run_sweep(MATRIX[:1], cluster=A40_CLUSTER, seeds=(0,)))
+    assert sd["cells"][0]["scenario"]["kind"] == "prefill"
+
+
+# --------------------------------------------------------------------------
+# serve()/serve_batch(): bit-identity with per-engine simulate()
+# --------------------------------------------------------------------------
+
+def _queries(cells):
+    return [ServeQuery(c.arch, c.strategy, global_batch=c.global_batch,
+                       seq=c.seq, smoke=c.smoke, scenario=c.scenario)
+            for c in cells]
+
+
+def test_serve_batch_matches_simulate_per_scenario(tmp_path):
+    answers = DistSim.serve_batch(_queries(MATRIX), str(tmp_path))
+    for c, a in zip(MATRIX, answers):
+        sim = DistSim(c.config(), c.strategy, c.global_batch, c.seq,
+                      _provider(), scenario=c.scenario)
+        r = sim.simulate()
+        assert a.batch_time == r.batch_time, c.label()
+        assert a.throughput_tokens == r.throughput_tokens(), c.label()
+        if c.scenario.kind == "decode":
+            # tokens/sec numerator is slots * steps, not gb * seq
+            assert a.throughput_tokens == pytest.approx(
+                c.global_batch * c.scenario.task_count(c.strategy)
+                / a.batch_time)
+            assert a.kv_cache_bytes > 0
+        else:
+            assert a.kv_cache_bytes == 0.0
+
+
+def test_serve_decode_kv_headroom(tmp_path):
+    c = next(c for c in MATRIX if c.scenario.kind == "decode"
+             and c.scenario.context)
+    [a] = DistSim.serve_batch(_queries([c]), str(tmp_path))
+    micro = c.scenario.microbatch_size(c.strategy, c.global_batch)
+    expect = kv_cache_bytes(c.config(), micro,
+                            c.scenario.kv_len(c.seq)) \
+        / (c.strategy.mp * c.strategy.pp)
+    assert a.kv_cache_bytes == expect
+    assert a.mem_bytes > a.kv_cache_bytes
+    assert a.feasible and a.hbm_headroom > 0
+
+
+def test_serve_query_scenario_roundtrip():
+    q = _queries(MATRIX)[1]
+    assert ServeQuery.from_dict(json.loads(json.dumps(q.to_dict()))) == q
+
+
+def test_warm_store_fresh_process_bit_identical(tmp_path):
+    """Acceptance: serve(scenario=decode) tokens/sec from a WARM store
+    in a FRESH python process equals per-engine simulate() here."""
+    cells = [c for c in MATRIX if c.scenario.kind == "decode"][:2]
+    queries = _queries(cells)
+    DistSim.serve_batch(queries, str(tmp_path))      # warm the store
+    expected = []
+    for c in cells:
+        r = DistSim(c.config(), c.strategy, c.global_batch, c.seq,
+                    _provider(), scenario=c.scenario).simulate()
+        expected.append((r.batch_time, r.throughput_tokens()))
+
+    src = os.path.abspath(os.path.join(
+        os.path.dirname(repro.core.__file__), "..", ".."))
+    child = (
+        "import json, sys\n"
+        "sys.path.insert(0, sys.argv[1])\n"
+        "import repro.core\n"
+        "from repro.core import DistSim\n"
+        "from repro.store import ServeQuery\n"
+        "qs = [ServeQuery.from_dict(d) for d in json.loads(sys.argv[3])]\n"
+        "server = DistSim.serve(sys.argv[2])\n"
+        "ans = server.answer_batch(qs)\n"
+        "snap = server.snapshot()\n"
+        "json.dump({'bt': [a.batch_time for a in ans],\n"
+        "           'tok': [a.throughput_tokens for a in ans],\n"
+        "           'evals': sum(c['evaluations'] for c in\n"
+        "                        snap['clusters'].values())},\n"
+        "          sys.stdout)\n")
+    out = subprocess.run(
+        [sys.executable, "-c", child, src, str(tmp_path),
+         json.dumps([q.to_dict() for q in queries])],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    got = json.loads(out.stdout)
+    assert got["evals"] == 0               # everything from the store
+    assert got["bt"] == [bt for bt, _ in expected]
+    assert got["tok"] == [tok for _, tok in expected]

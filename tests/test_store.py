@@ -338,3 +338,109 @@ def test_microbatch_floor_single_source():
                   _fresh_provider())
     assert sim.microbatch() == strat.microbatch_size(16)
     assert BuildCache._microbatch(strat, 16) == strat.microbatch_size(16)
+
+
+# --------------------------------------------------------------------------
+# gc: shard compaction + stale-entry collection
+# --------------------------------------------------------------------------
+
+def test_gc_compacts_shards_round_trip(tmp_path):
+    """Multiple shards (two flushes) -> gc -> ONE shard; a fresh
+    provider loads the exact same event cache, and a re-sweep through
+    the compacted store is bit-identical."""
+    store, p = _warm_store(tmp_path)
+    # second flush with new content: sweep more cells, flush the delta
+    bc = PersistentBuildCache(p, store)
+    run_sweep(MATRIX[4:8], provider=p, seeds=SEEDS, cache=bc)
+    bc.flush()
+    assert store.entry_counts(p)["event_shards"] >= 2
+    before = _fresh_provider()
+    ProfileStore(str(tmp_path)).load_events(before)
+
+    cold = run_sweep(MATRIX[:8], provider=_fresh_provider(), seeds=SEEDS)
+    stats = ProfileStore(str(tmp_path)).gc()
+    assert stats["namespaces"] == 1
+    assert stats["shards_after"] == 1
+    assert stats["events_dropped"] == 0    # same version: nothing lost
+    assert store.entry_counts(p)["event_shards"] == 1
+
+    after = _fresh_provider()
+    ProfileStore(str(tmp_path)).load_events(after)
+    assert after.cache_snapshot() == before.cache_snapshot()
+    p2 = _fresh_provider()
+    warm = run_sweep(MATRIX[:8], provider=p2, seeds=SEEDS,
+                     store=str(tmp_path))
+    assert dumps(warm) == dumps(cold)
+    assert p2.stats.evaluations == 0       # compacted store still warm
+
+
+def test_gc_idempotent(tmp_path):
+    _warm_store(tmp_path)
+    ProfileStore(str(tmp_path)).gc()
+    stats = ProfileStore(str(tmp_path)).gc()
+    assert stats["shards_before"] == stats["shards_after"] == 1
+    assert stats["events_dropped"] == 0
+    assert stats["builds_dropped"] == 0
+
+
+def test_gc_drops_stale_version_orphans(tmp_path):
+    """Entries written before a clear_cache() bump are orphans a reader
+    would reject anyway — gc removes them from disk. Without a provider
+    the live version is the highest present (the most recent writer)."""
+    store, p = _warm_store(tmp_path)      # version-0 events + builds
+    old_counts = store.entry_counts(p)
+    bumped = _fresh_provider()
+    bumped.clear_cache()                   # version 0 -> 1
+    bc = PersistentBuildCache(bumped, ProfileStore(str(tmp_path)))
+    run_sweep(SMALL, provider=bumped, seeds=SEEDS, cache=bc)
+    bc.flush()                             # version-1 shard + builds
+
+    stats = ProfileStore(str(tmp_path)).gc()
+    assert stats["events_dropped"] > 0
+    # the v1 sweep overwrote the stale v0 builds IN PLACE (same content
+    # address, save_build refreshes a stale incumbent), so gc finds
+    # only live builds left
+    assert stats["builds_dropped"] == 0
+    assert stats["builds_kept"] == old_counts["builds"]
+    # the surviving store serves the bumped provider with zero misses
+    fresh = _fresh_provider()
+    fresh.clear_cache()
+    assert ProfileStore(str(tmp_path)).load_events(fresh) \
+        == bumped.cache_size
+    # ... and a provider-scoped gc honors ITS version, not the max
+    stats2 = ProfileStore(str(tmp_path)).gc(provider=fresh)
+    assert stats2["events_dropped"] == 0
+
+
+def test_gc_removes_corrupt_files(tmp_path):
+    store, p = _warm_store(tmp_path)
+    with open(os.path.join(store._events_dir(p),
+                           "deadbeefdeadbeefdeadbeef.json"), "w") as f:
+        f.write("{not json")
+    with open(os.path.join(store._builds_dir(p),
+                           "deadbeefdeadbeefdeadbeef.pkl"), "wb") as f:
+        f.write(b"\x80\x04junk")
+    stats = ProfileStore(str(tmp_path)).gc()
+    assert stats["builds_dropped"] == 1
+    assert not os.path.exists(os.path.join(
+        store._events_dir(p), "deadbeefdeadbeefdeadbeef.json"))
+    assert not os.path.exists(os.path.join(
+        store._builds_dir(p), "deadbeefdeadbeefdeadbeef.pkl"))
+    p2 = _fresh_provider()
+    assert ProfileStore(str(tmp_path)).load_events(p2) == p.cache_size
+
+
+def test_gc_cli(tmp_path):
+    _warm_store(tmp_path)
+    src = os.path.abspath(os.path.join(
+        os.path.dirname(repro.core.__file__), "..", ".."))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.store", "gc", str(tmp_path),
+         "--json"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": src})
+    assert out.returncode == 0, out.stderr
+    import json as _json
+    stats = _json.loads(out.stdout)
+    assert stats["shards_after"] == 1
+    assert stats["builds_kept"] > 0
