@@ -1,0 +1,197 @@
+"""Degraded-fleet gate entry point (CI: fault-smoke job).
+
+Gates the perturbation axis (``DistSim.simulate(perturb=...)``):
+
+1. zero-perturbation replay stays BIT-IDENTICAL — ``perturb=None`` and
+   an empty :class:`Perturbation` both reproduce the unperturbed
+   engine's predict and seeded-replay outputs byte-for-byte;
+2. straggler slowdown is monotone in the factor, with factor 1.0
+   exactly equal to the clean run;
+3. fault recovery splices consistently: the degraded total equals
+   pre-fault steps + recovery components + post-replan steps;
+4. the structural degraded matrix (:func:`repro.validate.run_degraded`)
+   passes, and its predicted recovery times / post-failure throughput
+   match the goldens (``tests/goldens/validation_degraded.json``).
+
+    PYTHONPATH=src python benchmarks/bench_fault.py --smoke
+    PYTHONPATH=src python benchmarks/bench_fault.py --update-goldens
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import (DistSim, Fault, Perturbation, Straggler, Strategy)
+from repro.validate import format_degraded_report, run_degraded
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), os.pardir, "tests",
+                           "goldens", "validation_degraded.json")
+
+
+def _sim() -> DistSim:
+    return DistSim(get_config("gpt2_345m"),
+                   Strategy(mp=1, pp=2, dp=2, microbatches=4,
+                            schedule="1f1b"), 16, 512)
+
+
+def identity_gate() -> dict:
+    """perturb=None and an empty Perturbation are bit-identical to the
+    unperturbed engine, on both the predict and seeded-replay paths."""
+    eng = _sim().engine()
+    empty = Perturbation(steps=1)
+    pred0 = eng.run_batched(None).batch_times
+    pred1 = eng.run_batched(None, perturb=None).batch_times
+    pred2 = eng.run_batched(None, perturb=empty).batch_times
+    seeds = [0, 1, 2]
+    rep0 = eng.run_batched(seeds, jitter_sigma=0.025).batch_times
+    rep1 = eng.run_batched(seeds, jitter_sigma=0.025,
+                           perturb=empty).batch_times
+    seq = eng.run(jitter_sigma=0.025, seed=0, perturb=empty).batch_time
+    return {
+        "predict_identical": bool(np.array_equal(pred0, pred1)
+                                  and np.array_equal(pred0, pred2)),
+        "replay_identical": bool(np.array_equal(rep0, rep1)),
+        "run_identical": seq == float(rep0[0]),
+    }
+
+
+def monotonicity_gate() -> dict:
+    """Slowdown factors 1.0 < 1.25 < 1.5 < 2.0 on pipeline device 1 of
+    both replicas: batch time exactly equal at 1.0, strictly
+    increasing after."""
+    eng = _sim().engine()
+    base = float(eng.run_batched(None).batch_times[0])
+    times = []
+    for f in (1.0, 1.25, 1.5, 2.0):
+        p = Perturbation(stragglers=(Straggler(1, f), Straggler(3, f)))
+        times.append(float(eng.run_batched(None, perturb=p)
+                           .batch_times[0]))
+    return {
+        "baseline": base,
+        "times": times,
+        "unit_factor_exact": times[0] == base,
+        "strictly_monotone": all(a < b for a, b in zip(times, times[1:])),
+    }
+
+
+def splice_gate() -> dict:
+    """The canonical fault cell decomposes exactly: 6 pre-fault steps
+    + detect + restore + replan + 2 recomputed steps + 6 post-replan
+    steps, with the post-replan grid dp=1 (mp*pp kept intact)."""
+    sim = _sim()
+    run = sim.simulate(perturb=Perturbation(
+        faults=(Fault(3, 6, detect_s=0.5),), steps=12, save_every=4))
+    rec = run.recoveries[0]
+    expected = (6 * run.baseline_step_time + rec.recovery_times
+                + 6 * run.post_failure_step_time)
+    return {
+        "total": float(run.total_times[0]),
+        "recovery": float(rec.recovery_times[0]),
+        "decomposes": bool(np.allclose(run.total_times, expected,
+                                       rtol=1e-12, atol=0.0)),
+        "ckpt_ok": rec.ckpt_step == 4 and rec.lost_steps == 2,
+        "replan_ok": run.final_strategy.label() == "1M2P1D"
+        and run.effective_global_batch == 8,
+        "throughput_positive": bool(
+            np.all(run.post_failure_throughput > 0)),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate (identity + monotonicity + splice + "
+                         "matrix vs goldens; the default)")
+    ap.add_argument("--cluster", default="a40-cluster")
+    ap.add_argument("--out", default="degraded_report.json",
+                    help="report path ('' to skip writing)")
+    ap.add_argument("--update-goldens", action="store_true",
+                    help=f"rewrite {os.path.normpath(GOLDEN_PATH)}")
+    args = ap.parse_args()
+    if args.update_goldens and args.cluster != "a40-cluster":
+        ap.error("--update-goldens pins the default cluster — "
+                 "tests/test_perturb.py hard-codes it")
+
+    failed = False
+
+    ig = identity_gate()
+    print(f"identity gate — predict: {ig['predict_identical']}, "
+          f"replay: {ig['replay_identical']}, "
+          f"run(): {ig['run_identical']}")
+    if not all(ig.values()):
+        print("fault/ERROR: zero-perturbation path is not bit-identical",
+              file=sys.stderr)
+        failed = True
+
+    mg = monotonicity_gate()
+    lad = ", ".join(f"{t * 1e3:.2f}ms" for t in mg["times"])
+    print(f"monotonicity gate — clean {mg['baseline'] * 1e3:.2f}ms; "
+          f"factors 1.0/1.25/1.5/2.0 -> {lad}; "
+          f"unit-factor exact: {mg['unit_factor_exact']}, "
+          f"strictly monotone: {mg['strictly_monotone']}")
+    if not (mg["unit_factor_exact"] and mg["strictly_monotone"]):
+        print("fault/ERROR: straggler slowdown not monotone in factor",
+              file=sys.stderr)
+        failed = True
+
+    sg = splice_gate()
+    print(f"splice gate — total {sg['total']:.3f}s (recovery "
+          f"{sg['recovery']:.3f}s): decomposes {sg['decomposes']}, "
+          f"ckpt {sg['ckpt_ok']}, replan {sg['replan_ok']}, "
+          f"throughput>0 {sg['throughput_positive']}")
+    if not (sg["decomposes"] and sg["ckpt_ok"] and sg["replan_ok"]
+            and sg["throughput_positive"]):
+        print("fault/ERROR: fault splice inconsistent", file=sys.stderr)
+        failed = True
+
+    report = run_degraded(cluster=args.cluster)
+    print()
+    print(format_degraded_report(report))
+    if not report.passed:
+        fails = ", ".join(c.cell.label() for c in report.failures)
+        print(f"fault/ERROR: structural violations on {fails}",
+              file=sys.stderr)
+        failed = True
+
+    if args.update_goldens:
+        path = os.path.normpath(GOLDEN_PATH)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(report.to_dict(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"goldens written to {path}")
+    else:
+        path = os.path.normpath(GOLDEN_PATH)
+        if os.path.exists(path):
+            with open(path) as f:
+                golden = json.load(f)
+            current = json.loads(json.dumps(report.to_dict(),
+                                            sort_keys=True))
+            if current != golden:
+                print("fault/ERROR: degraded matrix drifted from "
+                      f"goldens ({path}); if intentional, rerun with "
+                      "--update-goldens", file=sys.stderr)
+                failed = True
+            else:
+                print(f"goldens match ({len(golden['cells'])} cells)")
+        else:
+            print(f"fault/ERROR: goldens missing at {path}",
+                  file=sys.stderr)
+            failed = True
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report.to_dict(), f, indent=1)
+        print(f"report written to {args.out}")
+
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

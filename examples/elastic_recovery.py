@@ -55,7 +55,7 @@ def main():
         monitor.heartbeat(w, 1.0, now=0.0)
     for w in range(243):                          # 13 workers go silent
         monitor.heartbeat(w, 1.0, now=20.0)
-    dead = monitor.dead(now=25.0)
+    dead = monitor.mark_dead(now=25.0)    # detect (pure query) + transition
     print(f"dead workers: {len(dead)} → {monitor.alive_count()} survive")
     plan = replan_mesh(monitor.alive_count(), model_parallel=16)
     print(f"new mesh: data={plan.data} x model={plan.model} "

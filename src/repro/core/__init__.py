@@ -13,6 +13,9 @@ from repro.core.engine import EngineBuild, EventFlowEngine
 from repro.core.simulator import DistSim, SimBatch, SimResult
 from repro.core.megabatch import (MegaBatch, MegaPredict,
                                   megabatch_predict)
+from repro.core.perturb import (DegradedRun, Fault, Perturbation,
+                                Straggler, perturbation_from_dict,
+                                simulate_degraded)
 from repro.core.search import grid_search, SearchEntry
 from repro.core.costmodel import (ClusterSpec, CLUSTERS, V5E_POD,
                                   A40_CLUSTER, collective_time,
@@ -28,6 +31,8 @@ __all__ = [
     "DistSim", "SimBatch", "SimResult", "Strategy", "Event",
     "ComposedEvent", "stage_signature", "EngineBuild", "EventFlowEngine",
     "MegaBatch", "MegaPredict", "megabatch_predict",
+    "DegradedRun", "Fault", "Perturbation", "Straggler",
+    "perturbation_from_dict", "simulate_degraded",
     "grid_search", "SearchEntry", "ClusterSpec", "CLUSTERS", "V5E_POD",
     "A40_CLUSTER", "get_cluster", "AnalyticalProvider", "MeasuredProvider",
     "Provider", "ProviderStats", "profiling_cost",

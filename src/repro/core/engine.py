@@ -298,7 +298,7 @@ class EventFlowEngine:
     # ------------------------------------------------------------------
 
     def _sample(self, dp: int, rng, jitter: float, straggler: float,
-                clock: float):
+                clock: float, speed_scale=None):
         """All per-run random state, drawn up front.
 
         Returns (speed(dp,pp), dur_f, dur_b, p2p_f, p2p_b, fb, ar, opt,
@@ -306,6 +306,13 @@ class EventFlowEngine:
         token-feedback p2p, zeros otherwise — ar/opt are (dp, pp) and
         off is (dp, pp, mp). The fb draw happens only for decode
         engines, so train RNG consumption is unchanged.
+
+        ``speed_scale`` is a deterministic (dp, pp) duration multiplier
+        (a :meth:`repro.core.perturb.Perturbation.speed_grid`) composed
+        onto the stochastic straggler plane AFTER all draws — it never
+        touches the RNG, so seeded replays stay lane-comparable with
+        and without a perturbation, and ``None`` leaves every code
+        path byte-identical.
         """
         pp, m, mp = self.strat.pp, self.m, self.strat.mp
         n_pos = self.n_pos
@@ -313,6 +320,8 @@ class EventFlowEngine:
         speed = np.ones((dp, pp))
         if rng is not None and straggler > 0:
             speed = 1.0 + straggler * np.abs(rng.standard_normal((dp, pp)))
+        if speed_scale is not None:
+            speed = speed * speed_scale
 
         dur_f = np.empty((dp, n_pos, m))
         dur_b = np.empty((dp, n_pos, m))
@@ -532,20 +541,38 @@ class EventFlowEngine:
     # full run
     # ------------------------------------------------------------------
 
+    def _perturb_grid(self, perturb):
+        """Resolve a :class:`repro.core.perturb.Perturbation` to its
+        (dp, pp) multiplier plane (duck-typed — the engine stays
+        import-free of the perturb module). The engine models only the
+        straggler multipliers of ONE step; fault splicing across steps
+        lives in ``DistSim.simulate(perturb=...)``."""
+        if perturb is None:
+            return None
+        if getattr(perturb, "faults", ()):
+            raise ValueError(
+                "the engine evaluates one step; fault recovery is "
+                "spliced at the run level — use "
+                "DistSim.simulate(perturb=...)")
+        return perturb.speed_grid(self.strat)
+
     def run(self, jitter_sigma: float = 0.0, straggler_sigma: float = 0.0,
-            clock_sigma: float = 0.0, seed: Optional[int] = None
-            ) -> Timeline:
+            clock_sigma: float = 0.0, seed: Optional[int] = None,
+            perturb=None) -> Timeline:
         strat = self.strat
         pp, dp, mp = strat.pp, strat.dp, strat.mp
         noisy = (jitter_sigma > 0 or straggler_sigma > 0 or clock_sigma > 0)
         rng = (np.random.RandomState(seed)
                if seed is not None and noisy else None)
+        grid = self._perturb_grid(perturb)
         _, dur_f, dur_b, p2p_f, p2p_b, fb, ar, opt, off = self._sample(
-            dp, rng, jitter_sigma, straggler_sigma, clock_sigma)
+            dp, rng, jitter_sigma, straggler_sigma, clock_sigma,
+            speed_scale=grid)
 
         # DP replicas are independent until the gradient sync; with zero
-        # noise they are identical — simulate one, replicate analytically.
-        n_sim = dp if rng is not None else 1
+        # noise they are identical — simulate one, replicate analytically
+        # (a perturbation grid varies per replica, so it simulates all).
+        n_sim = dp if (rng is not None or grid is not None) else 1
         reps = [self._simulate_replica(dur_f[r], dur_b[r],
                                        p2p_f[r], p2p_b[r],
                                        fb[r] if self._decode else None)
@@ -704,7 +731,8 @@ class EventFlowEngine:
     def run_batched(self, seeds: Optional[Sequence[Optional[int]]] = None,
                     jitter_sigma: float = 0.0,
                     straggler_sigma: float = 0.0,
-                    clock_sigma: float = 0.0) -> TimelineBatch:
+                    clock_sigma: float = 0.0,
+                    perturb=None) -> TimelineBatch:
         """All S seeds' replays in one pass, bit-identical per seed to
         sequential ``run(seed=s)`` calls.
 
@@ -714,8 +742,10 @@ class EventFlowEngine:
         :meth:`_topo_order` with every (seed × replica) lane as a NumPy
         vector — the Python dependency walk no longer scales with S or
         dp. ``seeds=None`` is the predict lane (S=1, zero noise).
-        Returns a :class:`TimelineBatch`; no ``Activity`` objects are
-        built.
+        ``perturb`` applies a deterministic straggler multiplier plane
+        to every lane (see :meth:`_perturb_grid`); ``None`` is the
+        byte-identical unperturbed path. Returns a
+        :class:`TimelineBatch`; no ``Activity`` objects are built.
         """
         strat = self.strat
         pp, dp, mp = strat.pp, strat.dp, strat.mp
@@ -727,13 +757,14 @@ class EventFlowEngine:
         S = len(lane_seeds)
         noisy = (jitter_sigma > 0 or straggler_sigma > 0
                  or clock_sigma > 0)
-        # any batched run is a pure function of (build, seeds, sigmas) —
-        # memoized so cached engines (validate.BuildCache reuse across
-        # sweeps) skip the draw + recurrence pass entirely on a repeat.
-        # One entry per distinct (seeds, sigmas) combination actually
+        grid = self._perturb_grid(perturb)
+        # any batched run is a pure function of (build, seeds, sigmas,
+        # perturb) — memoized so cached engines (validate.BuildCache
+        # reuse across sweeps) skip the draw + recurrence pass entirely
+        # on a repeat. One entry per distinct combination actually
         # requested; sweeps use one.
         memo_key = (tuple(lane_seeds), jitter_sigma, straggler_sigma,
-                    clock_sigma)
+                    clock_sigma, perturb)
         hit = self._batch_memo.get(memo_key)
         if hit is not None:
             return hit
@@ -745,11 +776,13 @@ class EventFlowEngine:
                    if s is not None and noisy else None)
             any_rng = any_rng or rng is not None
             samples.append(self._sample(dp, rng, jitter_sigma,
-                                        straggler_sigma, clock_sigma))
+                                        straggler_sigma, clock_sigma,
+                                        speed_scale=grid))
         # A zero-noise lane has identical replicas, so simulating dp of
         # them (when other lanes are noisy) reproduces run()'s analytic
-        # replication bit-for-bit.
-        n_sim = dp if any_rng else 1
+        # replication bit-for-bit. A perturbation grid varies per
+        # replica, so it forces the full simulation too.
+        n_sim = dp if (any_rng or grid is not None) else 1
         R = S * n_sim
 
         def lanes(k: int) -> np.ndarray:

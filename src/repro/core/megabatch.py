@@ -84,9 +84,22 @@ class MegaBatch:
     program pads every candidate to the longest task count.
     """
 
-    def __init__(self, engines: Sequence[EventFlowEngine]):
+    def __init__(self, engines: Sequence[EventFlowEngine], perturb=None):
         engines = list(engines)
         self.engines = engines
+        # a Perturbation's straggler multipliers scale the profiled
+        # means at compile time (same operand pairings as the engine's
+        # speed plane, so candidate rows stay bit-identical to
+        # engine.run(perturb=...)); perturb=None compiles byte-identical
+        # arrays to the historical program. The single-replica program
+        # requires effects uniform across DP (pipe_scale raises
+        # otherwise); faults are run-level splices and rejected here.
+        if perturb is not None and getattr(perturb, "faults", ()):
+            raise ValueError(
+                "mega-batch predict evaluates one step; fault recovery "
+                "is spliced at the run level — use "
+                "DistSim.simulate(perturb=...)")
+        self.perturb = perturb
         K = len(engines)
         self.K = K
         sizes = [e.total_tasks for e in engines]
@@ -136,6 +149,11 @@ class MegaBatch:
         Slots ``base .. base+n`` hold this candidate's task end times in
         device-major schedule order; returns the next free slot."""
         pp, n_pos, m = eng.strat.pp, eng.n_pos, eng.m
+        # deterministic straggler multiplier per pipeline device (None
+        # when unperturbed — every array below then compiles
+        # byte-identical to the historical program)
+        scale = (self.perturb.pipe_scale(eng.strat)
+                 if self.perturb is not None else None)
         n = eng.total_tasks
         n_per_dev = np.asarray([len(t) for t in eng.task_isf],
                                dtype=np.int64)
@@ -191,19 +209,36 @@ class MegaBatch:
         b_send = (~isf) & (pos > 0)
         send[b_send] = p2p[pos[b_send] - 1]
 
+        if scale is not None:
+            # every duration/delay is scaled by its EXECUTING device —
+            # p2p by the sender (forward boundary p sends from device
+            # p % pp, backward boundary p from (p+1) % pp) — the exact
+            # products engine._sample forms via its speed plane
+            dur = dur * scale[dev]
+            del1[f_recv] = del1[f_recv] * scale[(pos[f_recv] - 1) % pp]
+            del2[b_recv] = del2[b_recv] * scale[(pos[b_recv] + 1) % pp]
+            send[f_send] = send[f_send] * scale[dev[f_send]]
+            send[b_send] = send[b_send] * scale[dev[b_send]]
+
         if getattr(eng, "_decode", False):
             # decode: step t's stage 0 waits on step t-1's token
             # feedback from the last stage (dep1) and its arrival floor
             # (dep2 rides the dummy slot: 0.0 + arrival == arrival,
-            # absorbed exactly by the row max — engine bit-identity)
+            # absorbed exactly by the row max — engine bit-identity).
+            # The feedback p2p is sent by the LAST stage's device, so
+            # it takes that device's straggler scale; arrival floors
+            # are wall-clock and never scale.
+            fb_base = eng.fb_base
+            if scale is not None:
+                fb_base = fb_base * scale[(n_pos - 1) % pp]
             f0 = isf & (pos == 0)
             later = f0 & (mic > 0)
             dep1[later] = f_slot[n_pos - 1, mic[later] - 1]
-            del1[later] = eng.fb_base
+            del1[later] = fb_base
             arrival = np.asarray(eng.arrival)
             del2[f0] = arrival[mic[f0]]
             fb_send = isf & (pos == n_pos - 1)
-            send[fb_send] = eng.fb_base
+            send[fb_send] = fb_base
 
         # reorder rows along this candidate's topo order: step j of the
         # program evaluates its j-th ready task
@@ -224,8 +259,12 @@ class MegaBatch:
         self._free_slot[k, :pp] = free
         self._seg[base - 1: base - 1 + n] = k * self.ppmax + dev
         self._send[base - 1: base - 1 + n] = send
-        self._ar[k, :pp] = eng.ar_base    # zeros when engine doesn't sync
-        self._opt[k, :pp] = eng.opt_base
+        if scale is None:
+            self._ar[k, :pp] = eng.ar_base   # zeros when engine no-sync
+            self._opt[k, :pp] = eng.opt_base
+        else:
+            self._ar[k, :pp] = np.asarray(eng.ar_base) * scale
+            self._opt[k, :pp] = np.asarray(eng.opt_base) * scale
         return base + n
 
     # ------------------------------------------------------------------
@@ -334,6 +373,9 @@ class MegaBatch:
 
 
 def megabatch_predict(engines: Sequence[EventFlowEngine],
-                      backend: str = "auto") -> MegaPredict:
-    """One-shot convenience: compile + evaluate K engines."""
-    return MegaBatch(engines).predict(backend)
+                      backend: str = "auto", perturb=None) -> MegaPredict:
+    """One-shot convenience: compile + evaluate K engines, optionally
+    under a :class:`repro.core.perturb.Perturbation` straggler plane
+    (uniform across DP; each candidate row stays bit-identical to
+    ``engine.run(perturb=perturb)``)."""
+    return MegaBatch(engines, perturb=perturb).predict(backend)

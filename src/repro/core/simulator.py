@@ -180,7 +180,8 @@ class DistSim:
                  straggler_sigma: float = 0.0,
                  clock_sigma: float = 0.0,
                  positions: Optional[List[Stage]] = None,
-                 scenario: Optional[Scenario] = None) -> SimBatch:
+                 scenario: Optional[Scenario] = None,
+                 perturb=None):
         """Run the model once, uniformly.
 
         ``seeds=None`` (default) is the performance model: one
@@ -193,7 +194,24 @@ class DistSim:
         ``scenario`` overrides the sim's constructor scenario for this
         call (e.g. ``sim.simulate(scenario=Decode(steps=16))`` on a sim
         built for training).
+
+        ``perturb`` (a :class:`repro.core.perturb.Perturbation`)
+        models a degraded fleet — straggler slowdowns and injected
+        failures with checkpoint-restore recovery — and returns a
+        :class:`repro.core.perturb.DegradedRun` (a multi-step spliced
+        timeline) instead of a single-step :class:`SimBatch`.
+        ``perturb=None`` is the byte-identical unperturbed path.
         """
+        if perturb is not None:
+            if scenario is not None or positions is not None:
+                raise ValueError(
+                    "perturb composes a multi-step run over the sim's "
+                    "own scenario/positions; per-call overrides are "
+                    "not supported together")
+            from repro.core.perturb import simulate_degraded
+            return simulate_degraded(
+                self, perturb, seeds=seeds, jitter_sigma=jitter_sigma,
+                straggler_sigma=straggler_sigma, clock_sigma=clock_sigma)
         sc = self.scenario if scenario is None else scenario
         engine = self.engine(positions, scenario=sc)
         if seeds is None:

@@ -30,6 +30,7 @@ from repro.core.costmodel import A40_CLUSTER, CLUSTERS, ClusterSpec
 from repro.core.events import Strategy
 from repro.core.megabatch import MegaBatch
 from repro.core.modelgraph import kv_cache_bytes
+from repro.core.perturb import Perturbation, perturbation_from_dict
 from repro.core.profiler import AnalyticalProvider
 from repro.core.scenario import TRAIN, Scenario, scenario_from_dict
 from repro.search.prune import HBM_BUDGET, estimate_memory
@@ -50,11 +51,20 @@ class ServeQuery:
     smoke: bool = False                    # reduce arch via smoke_config
     cluster: str = A40_CLUSTER.name       # registry name
     scenario: Scenario = TRAIN
+    # degraded-fleet what-if: a straggler plane applied at predict
+    # time (run-level only — builds/store addresses never key on it)
+    perturb: Optional[Perturbation] = None
 
     def to_dict(self) -> Dict:
         d = dataclasses.asdict(self)
         d["strategy"] = self.strategy.to_dict()
         d["scenario"] = self.scenario.to_dict()
+        # the scenario-key pattern: an absent axis is OMITTED, so every
+        # pre-perturb serialized query/report stays byte-identical
+        if self.perturb is None:
+            del d["perturb"]
+        else:
+            d["perturb"] = self.perturb.to_dict()
         return d
 
     @classmethod
@@ -62,6 +72,7 @@ class ServeQuery:
         d = dict(d)
         d["strategy"] = Strategy.from_dict(d["strategy"])
         d["scenario"] = scenario_from_dict(d.get("scenario"))
+        d["perturb"] = perturbation_from_dict(d.get("perturb"))
         from repro.core.serde import dataclass_from_dict
         return dataclass_from_dict(cls, d)
 
@@ -141,14 +152,17 @@ class StrategyServer:
     def answer_batch(self, queries: Sequence[ServeQuery]
                      ) -> List[ServeAnswer]:
         """Answer all queries, one mega-batch array call per distinct
-        cluster, answers returned in query order."""
+        (cluster, perturbation) group, answers returned in query
+        order. Perturbed queries share the unperturbed queries'
+        engines and store entries — only the compiled program differs
+        (the straggler plane scales profiled means at compile time)."""
         queries = list(queries)
-        by_cluster: "OrderedDict[str, List[int]]" = OrderedDict()
+        by_group: "OrderedDict" = OrderedDict()
         for i, q in enumerate(queries):
-            by_cluster.setdefault(q.cluster, []).append(i)
+            by_group.setdefault((q.cluster, q.perturb), []).append(i)
 
         answers: List[Optional[ServeAnswer]] = [None] * len(queries)
-        for cname, idxs in by_cluster.items():
+        for (cname, perturb), idxs in by_group.items():
             bc = self._cache_for(cname)
             spec = self.clusters[cname]
             budget = spec.chip.hbm_bytes * HBM_BUDGET
@@ -172,10 +186,10 @@ class StrategyServer:
             # engine objects are stable across repeat queries (the
             # build cache returns incumbents), so a repeat batch reuses
             # the compiled program and pays only the array eval
-            key = (cname, tuple(id(e) for e in engines))
+            key = (cname, perturb, tuple(id(e) for e in engines))
             mb = self._programs.get(key)
             if mb is None:
-                mb = MegaBatch(engines)
+                mb = MegaBatch(engines, perturb=perturb)
                 self._programs[key] = mb
                 while len(self._programs) > self._PROGRAM_MEMO_MAX:
                     self._programs.popitem(last=False)

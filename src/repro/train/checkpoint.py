@@ -19,27 +19,66 @@ Fault-tolerance properties:
 On a multi-host cluster each host writes only the shards it owns
 (``jax.experimental.multihost_utils``); this container is single-host,
 where process_index()==0 owns everything — same code path.
+
+jax is imported lazily inside the functions that flatten/device_get
+real pytrees: the manifest helpers (:func:`manifest_nbytes`,
+:func:`synthetic_manifest`) are pure numpy, so engine-side code
+(``repro.core.perturb`` sizing restore-read events) never drags jax
+onto CPU-only boxes — the ``megabatch`` auto-backend rule.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple
 
-import jax
 import numpy as np
 
 
 def _leaf_paths(tree: Any):
+    import jax
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in leaves]
     return names, [l for _, l in leaves], treedef
 
 
+def manifest_nbytes(manifest: Mapping) -> float:
+    """Total bytes described by a checkpoint manifest — works on
+    manifests written by :func:`save` and synthetic ones from
+    :func:`synthetic_manifest` (pure numpy; no jax import)."""
+    total = 0.0
+    for e in manifest["leaves"]:
+        n = 1
+        for s in e["shape"]:
+            n *= int(s)
+        total += n * np.dtype(e["dtype"]).itemsize
+    return float(total)
+
+
+def synthetic_manifest(step: int, named_bytes: Mapping[str, float],
+                       dtype: str = "float32") -> Dict:
+    """A model-level manifest (no arrays on disk): one 1-D leaf per
+    ``name -> nbytes`` entry, byte counts rounded to whole elements.
+    Shaped exactly like :func:`save`'s ``manifest.json`` so consumers
+    (``repro.core.perturb`` restore-read sizing, tooling) use one
+    accounting path for real and hypothetical checkpoints."""
+    item = np.dtype(dtype).itemsize
+    leaves = []
+    for i, (name, nbytes) in enumerate(named_bytes.items()):
+        leaves.append({"i": i, "path": str(name),
+                       "shape": [max(0, int(round(float(nbytes) / item)))],
+                       "dtype": str(np.dtype(dtype))})
+    return {"step": int(step), "leaves": leaves}
+
+
 def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
-    """Write checkpoint atomically; returns the final path."""
+    """Write checkpoint atomically; returns the final path. ``keep``
+    newest checkpoints are retained (``keep=0`` retains nothing)."""
+    import jax
+    if keep < 0:
+        raise ValueError(f"keep must be >= 0, got {keep}")
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -60,9 +99,10 @@ def save(directory: str, step: int, tree: Any, keep: int = 3) -> str:
         shutil.rmtree(final)
     os.rename(tmp, final)                      # atomic commit
 
-    # retention
+    # retention (keep=0 means the [:-0] slice would retain EVERYTHING;
+    # spell the "delete all" case out)
     steps = sorted(all_steps(directory))
-    for s in steps[:-keep]:
+    for s in (steps[:-keep] if keep else steps):
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)
     return final
@@ -89,6 +129,7 @@ def latest_step(directory: str) -> Optional[int]:
 def restore(directory: str, tree: Any, step: Optional[int] = None
             ) -> Tuple[Any, int]:
     """Restore into the structure of ``tree`` (shape/dtype validated)."""
+    import jax
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -109,6 +150,13 @@ def restore(directory: str, tree: Any, step: Optional[int] = None
         if tuple(arr.shape) != want:
             raise ValueError(
                 f"shape mismatch for {name}: ckpt {arr.shape} vs {want}")
-        out.append(arr.astype(leaf.dtype)
-                   if hasattr(leaf, "dtype") else arr)
+        if (hasattr(leaf, "dtype")
+                and np.dtype(arr.dtype) != np.dtype(leaf.dtype)):
+            # the docstring's "fails loudly on config drift" promise: a
+            # silent astype would hide a changed training config (and
+            # quietly round fp32 moments to bf16 or vice versa)
+            raise ValueError(
+                f"dtype mismatch for {name}: ckpt {arr.dtype} vs "
+                f"{np.dtype(leaf.dtype)}")
+        out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out), step

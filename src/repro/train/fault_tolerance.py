@@ -50,7 +50,14 @@ class HeartbeatMonitor:
 
     def heartbeat(self, worker: int, step_time: float,
                   now: Optional[float] = None):
+        """Record a step heartbeat. A heartbeat from a worker
+        previously marked dead re-joins it (elastic rescheduling
+        brought the node back); its stale step-time history is dropped
+        so straggler detection starts fresh."""
         w = self.workers[worker]
+        if not w.alive:
+            w.alive = True
+            w.step_times.clear()
         w.last_heartbeat = now if now is not None else time.time()
         w.step_times.append(step_time)
         if len(w.step_times) > self.window:
@@ -67,10 +74,25 @@ class HeartbeatMonitor:
                 and np.mean(w.step_times) > self.straggler_factor * med]
 
     def dead(self, now: Optional[float] = None) -> List[int]:
+        """Pure query: workers currently overdue (alive but silent for
+        longer than ``dead_after_s``). Does NOT change state — call
+        :meth:`mark_dead` to transition them, so callers that poll
+        twice (or several pollers sharing one monitor) all see the
+        same death."""
         now = now if now is not None else time.time()
+        return [i for i, w in self.workers.items()
+                if w.alive and now - w.last_heartbeat > self.dead_after_s]
+
+    def mark_dead(self, workers: Optional[List[int]] = None,
+                  now: Optional[float] = None) -> List[int]:
+        """State transition: mark ``workers`` (default: the current
+        :meth:`dead` set) as dead; returns the workers actually
+        transitioned. A later :meth:`heartbeat` re-joins them."""
+        targets = self.dead(now) if workers is None else workers
         out = []
-        for i, w in self.workers.items():
-            if w.alive and now - w.last_heartbeat > self.dead_after_s:
+        for i in targets:
+            w = self.workers[i]
+            if w.alive:
                 w.alive = False
                 out.append(i)
         return out
@@ -95,6 +117,9 @@ def replan_mesh(survivors: int, model_parallel: int) -> ElasticPlan:
     Keeps `model` intact if possible (TP re-sharding moves the most
     bytes); drops to the largest power-of-two data degree that fits.
     """
+    if survivors < 1:
+        raise ValueError(
+            f"replan_mesh needs at least one survivor, got {survivors}")
     mp = model_parallel
     while mp > 1 and survivors < mp:
         mp //= 2
@@ -109,10 +134,17 @@ def run_with_recovery(n_steps: int,
                       save_fn: Callable[[int], None],
                       restore_fn: Callable[[], int],
                       save_every: int = 10,
-                      failure_at: Optional[int] = None) -> Tuple[int, int]:
+                      failure_at: Optional[int] = None,
+                      max_recoveries: int = 8) -> Tuple[int, int]:
     """Driver with checkpoint/restart. ``step_fn(step)`` may raise
     RuntimeError (simulated node failure); we restore and continue.
-    Returns (completed_steps, n_recoveries)."""
+    Returns (completed_steps, n_recoveries).
+
+    ``max_recoveries`` bounds the restart budget: a persistent failure
+    (e.g. a step that deterministically raises) would otherwise loop
+    forever, since ``restore_fn`` rewinds to the same step each time.
+    When the budget is exhausted the last failure is re-raised with
+    recovery context chained on it."""
     recoveries = 0
     step = restore_fn()
     while step < n_steps:
@@ -124,7 +156,12 @@ def run_with_recovery(n_steps: int,
             step += 1
             if step % save_every == 0:
                 save_fn(step)
-        except RuntimeError:
+        except RuntimeError as exc:
             recoveries += 1
+            if recoveries > max_recoveries:
+                raise RuntimeError(
+                    f"persistent failure at step {step}: recovery "
+                    f"budget exhausted after {max_recoveries} "
+                    f"recoveries") from exc
             step = restore_fn()
     return step, recoveries

@@ -15,6 +15,11 @@ error, <5% per-device activity error, paper §5):
 ``tests/goldens/``.
 """
 from repro.validate.build_cache import BuildCache, BuildCacheStats
+from repro.validate.degraded import (DegradedCell, DegradedCellResult,
+                                     DegradedReport, degraded_matrix,
+                                     format_degraded_report, run_degraded,
+                                     run_degraded_cell,
+                                     structural_violations)
 from repro.validate.metrics import (CellMetrics, aggregate, compare_batch,
                                     compare_timelines)
 from repro.validate.report import (dump, dumps, format_validation_report,
@@ -24,7 +29,10 @@ from repro.validate.sweep import (CellResult, SweepResult, Thresholds,
                                   run_sweep, serving_matrix, smoke_matrix)
 
 __all__ = [
-    "BuildCache", "BuildCacheStats", "CellMetrics", "aggregate",
+    "BuildCache", "BuildCacheStats", "DegradedCell",
+    "DegradedCellResult", "DegradedReport", "degraded_matrix",
+    "format_degraded_report", "run_degraded", "run_degraded_cell",
+    "structural_violations", "CellMetrics", "aggregate",
     "compare_batch", "compare_timelines", "dump", "dumps",
     "format_validation_report", "load", "load_path", "save",
     "CellResult", "SweepResult", "Thresholds", "ValidationCell",

@@ -1,0 +1,328 @@
+"""Perturbation axis: stragglers/faults as timeline events.
+
+The two load-bearing guarantees:
+
+* ``perturb=None`` — and an empty :class:`Perturbation` — leave every
+  predict/replay path BIT-identical to the unperturbed engine
+  (differential oracle: compared against ``engine.run()`` /
+  ``run_batched()`` outputs, not tolerances);
+* store/build/query addresses never key on the perturbation, so every
+  pre-perturb serialized artifact stays byte-identical.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Fault,
+                        MegaBatch, Perturbation, Straggler, Strategy,
+                        perturbation_from_dict)
+from repro.core.perturb import OPEN, restore_manifest
+from repro.core.scenario import Decode
+from repro.store.profile_store import build_key_json
+from repro.store.serve import ServeQuery
+from repro.validate import degraded_matrix, run_degraded
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "validation_degraded.json")
+
+
+def _sim(mp=1, pp=2, dp=2, m=4, gb=16, **kw):
+    return DistSim(get_config("gpt2_345m"),
+                   Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
+                            schedule="1f1b"), gb, 512, **kw)
+
+
+# ------------------------ spec validation ------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        Straggler(rank=-1, factor=1.5)
+    with pytest.raises(ValueError):
+        Straggler(rank=0, factor=0.0)
+    with pytest.raises(ValueError):
+        Straggler(rank=0, factor=1.5, window=(4, 2))
+    with pytest.raises(ValueError):
+        Fault(rank=0, at_step=-1)
+    with pytest.raises(ValueError):
+        Perturbation(steps=0)
+    with pytest.raises(ValueError):                 # duplicate fault rank
+        Perturbation(faults=(Fault(0, 1), Fault(0, 3)), steps=8)
+    with pytest.raises(ValueError):                 # fault outside run
+        Perturbation(faults=(Fault(0, 9),), steps=8)
+    # faults sorted by at_step regardless of input order
+    p = Perturbation(faults=(Fault(1, 5), Fault(0, 2)), steps=8)
+    assert [f.at_step for f in p.faults] == [2, 5]
+    assert Straggler(0, 2.0, window=(1, 3)).covers(2)
+    assert not Straggler(0, 2.0, window=(1, 3)).covers(3)
+    assert Straggler(0, 2.0).covers(10 ** 9)        # OPEN window
+
+
+def test_speed_grid_layout_and_range():
+    # rank = (r*pp + d)*mp + j; the whole mp group slows together
+    strat = Strategy(mp=2, pp=2, dp=2, microbatches=4)
+    p = Perturbation(stragglers=(Straggler(2, 1.5),))    # r=0, d=1
+    grid = p.speed_grid(strat)
+    assert grid.shape == (2, 2)
+    assert grid[0, 1] == 1.5 and grid.sum() == 4.5
+    with pytest.raises(ValueError, match="out of range"):
+        Perturbation(stragglers=(Straggler(8, 2.0),)).speed_grid(strat)
+    # stacked stragglers on one rank multiply
+    p2 = Perturbation(stragglers=(Straggler(2, 1.5), Straggler(2, 2.0)))
+    assert p2.speed_grid(strat)[0, 1] == 3.0
+
+
+def test_serde_roundtrip():
+    p = Perturbation(
+        stragglers=(Straggler(1, 1.5, (2, 6)), Straggler(3, 2.0)),
+        faults=(Fault(2, 5, detect_s=0.5),),
+        steps=12, save_every=3, replan_s=1.0)
+    assert perturbation_from_dict(p.to_dict()) == p
+    assert perturbation_from_dict(None) is None
+    assert json.loads(json.dumps(p.to_dict())) == p.to_dict()
+    assert p.label() == "slow1x1.5@2:6+slow3x2+fault2@5"
+    assert Perturbation().label() == "clean"
+
+
+# ------------------------ bit-identity (differential) ------------------------
+
+def test_zero_perturbation_is_bit_identical():
+    eng = _sim().engine()
+    empty = Perturbation(steps=1)
+    assert np.array_equal(eng.run_batched(None).batch_times,
+                          eng.run_batched(None, perturb=empty)
+                          .batch_times)
+    seeds = [0, 1, 2]
+    ref = eng.run_batched(seeds, jitter_sigma=0.025,
+                          straggler_sigma=0.01).batch_times
+    out = eng.run_batched(seeds, jitter_sigma=0.025,
+                          straggler_sigma=0.01,
+                          perturb=empty).batch_times
+    assert np.array_equal(ref, out)
+    assert eng.run(jitter_sigma=0.025, seed=1).batch_time \
+        == eng.run(jitter_sigma=0.025, seed=1, perturb=empty).batch_time
+
+
+def test_perturbed_run_matches_run_batched():
+    eng = _sim().engine()
+    p = Perturbation(stragglers=(Straggler(1, 1.7),))
+    assert eng.run(perturb=p).batch_time \
+        == float(eng.run_batched(None, perturb=p).batch_times[0])
+    assert eng.run(jitter_sigma=0.025, seed=3, perturb=p).batch_time \
+        == float(eng.run_batched([3], jitter_sigma=0.025,
+                                 perturb=p).batch_times[0])
+
+
+def test_straggler_monotone_in_factor():
+    eng = _sim().engine()
+    base = float(eng.run_batched(None).batch_times[0])
+    times = []
+    for f in (1.0, 1.25, 1.5, 2.0):
+        p = Perturbation(stragglers=(Straggler(1, f), Straggler(3, f)))
+        times.append(float(eng.run_batched(None, perturb=p)
+                           .batch_times[0]))
+    assert times[0] == base                      # exact, not approx
+    assert all(a < b for a, b in zip(times, times[1:]))
+
+
+def test_engine_rejects_faults():
+    eng = _sim().engine()
+    p = Perturbation(faults=(Fault(0, 1),), steps=4)
+    with pytest.raises(ValueError, match="run level"):
+        eng.run(perturb=p)
+    with pytest.raises(ValueError, match="run level"):
+        eng.run_batched(None, perturb=p)
+
+
+# ------------------------ megabatch ------------------------
+
+def test_megabatch_perturbed_bit_identical_to_engine():
+    eng = _sim().engine()
+    p = Perturbation(stragglers=(Straggler(1, 1.5), Straggler(3, 1.5)))
+    mb = float(MegaBatch([eng], perturb=p).predict("numpy")
+               .batch_times[0])
+    assert mb == eng.run(perturb=p).batch_time
+    # and the unperturbed program is untouched by the feature
+    assert float(MegaBatch([eng]).predict("numpy").batch_times[0]) \
+        == float(eng.run_batched(None).batch_times[0])
+
+
+def test_megabatch_rejects_nonuniform_and_faults():
+    eng = _sim().engine()
+    with pytest.raises(ValueError, match="uniform across DP"):
+        MegaBatch([eng], perturb=Perturbation(
+            stragglers=(Straggler(1, 1.5),))).predict("numpy")
+    with pytest.raises(ValueError, match="run level"):
+        MegaBatch([eng], perturb=Perturbation(faults=(Fault(0, 1),),
+                                              steps=4))
+
+
+# ------------------------ fault splice ------------------------
+
+def test_fault_recovery_splice():
+    sim = _sim()
+    p = Perturbation(faults=(Fault(3, 6, detect_s=0.5),), steps=12,
+                     save_every=4, replan_s=1.5)
+    run = sim.simulate(perturb=p)
+    assert run.steps == 12 and len(run.recoveries) == 1
+    rec = run.recoveries[0]
+    assert rec.ckpt_step == 4 and rec.lost_steps == 2
+    assert rec.survivors == 3
+    assert rec.plan.model == 2 and rec.plan.data == 1
+    assert run.final_strategy.dp == 1            # mp*pp kept intact
+    assert run.final_strategy.mp * run.final_strategy.pp == 2
+    assert run.effective_global_batch == 8       # microbatch constant
+    kinds = [e.kind for e in rec.events]
+    assert kinds == ["detect", "restore", "replan", "recompute"]
+    durs = {e.kind: float(e.duration[0]) for e in rec.events}
+    assert durs["detect"] == 0.5 and durs["replan"] == 1.5
+    assert durs["restore"] > 0
+    # exact decomposition: 6 pre-fault + recovery + 6 post-replan steps
+    expected = (6 * run.baseline_step_time + rec.recovery_times
+                + 6 * run.post_failure_step_time)
+    np.testing.assert_allclose(run.total_times, expected, rtol=1e-12)
+    # timeline spans are contiguous from 0
+    tl = run.timeline(0)
+    assert tl[0][1] == 0.0
+    assert all(a[2] == b[1] for a, b in zip(tl, tl[1:]))
+    assert tl[-1][2] == pytest.approx(float(run.total_times[0]))
+
+
+def test_post_replan_runs_clean_of_stragglers():
+    """Mitigation (b): flagged stragglers are excluded at the re-plan,
+    so the post-failure segment matches the clean surviving grid."""
+    sim = _sim()
+    p = Perturbation(stragglers=(Straggler(1, 3.0),),
+                     faults=(Fault(3, 4),), steps=8, save_every=4)
+    run = sim.simulate(perturb=p)
+    post = [s for s in run.segments if s.start >= 4]
+    assert post and all(not s.stragglers for s in post)
+    # pre-fault segment IS perturbed (strictly slower than baseline)
+    pre = [s for s in run.segments if s.stop <= 4]
+    assert any(float(s.step_times[0])
+               > float(run.baseline_step_time[0]) for s in pre)
+
+
+def test_straggler_window_cuts_segments():
+    sim = _sim()
+    p = Perturbation(stragglers=(Straggler(1, 2.0, window=(2, 6)),),
+                     steps=8)
+    run = sim.simulate(perturb=p)
+    assert [(s.start, s.stop) for s in run.segments] \
+        == [(0, 2), (2, 6), (6, 8)]
+    t0, t1, t2 = (float(s.step_times[0]) for s in run.segments)
+    assert t0 == t2                              # same clean evaluation
+    assert t1 > t0
+    # open-ended window: straggler active to the end of the run
+    run2 = sim.simulate(perturb=Perturbation(
+        stragglers=(Straggler(1, 2.0, window=(2, OPEN)),), steps=8))
+    assert [(s.start, s.stop) for s in run2.segments] \
+        == [(0, 2), (2, 8)]
+
+
+def test_zero1_shrinks_restore_read():
+    sim = _sim()
+    stages = sim.engine().stages
+    plain = restore_manifest(stages, sim.strategy, 4)
+    z1 = restore_manifest(
+        stages, dataclasses.replace(sim.strategy, zero1=True), 4)
+    from repro.train.checkpoint import manifest_nbytes
+    assert manifest_nbytes(z1) < manifest_nbytes(plain)
+
+
+def test_double_fault_replans_twice():
+    sim = _sim(mp=1, pp=1, dp=4, m=2)
+    p = Perturbation(faults=(Fault(0, 3), Fault(2, 7)), steps=10,
+                     save_every=4)
+    run = sim.simulate(perturb=p)
+    assert [r.survivors for r in run.recoveries] == [3, 2]
+    assert [r.plan.data for r in run.recoveries] == [2, 2]
+    assert run.final_strategy.dp == 2
+    assert run.effective_global_batch == 8
+    assert run.steps_lost == 6                   # 3 + 3 recomputed
+
+
+def test_unrecoverable_and_invalid_faults_raise():
+    sim = _sim(mp=1, pp=2, dp=1, m=4)            # world=2 == mp*pp
+    with pytest.raises(ValueError, match="unrecoverable"):
+        sim.simulate(perturb=Perturbation(faults=(Fault(0, 1),),
+                                          steps=4))
+    with pytest.raises(ValueError, match="out of range"):
+        _sim().simulate(perturb=Perturbation(faults=(Fault(9, 1),),
+                                             steps=4))
+    with pytest.raises(ValueError, match="training-run"):
+        DistSim(get_config("gpt2_345m"),
+                Strategy(mp=1, pp=2, dp=2, microbatches=4), 8, 512,
+                scenario=Decode(steps=4)).simulate(
+            perturb=Perturbation(faults=(Fault(0, 1),), steps=4))
+    with pytest.raises(ValueError, match="scenario"):
+        _sim().simulate(perturb=Perturbation(steps=4),
+                        scenario=Decode(steps=4))
+
+
+def test_seeded_degraded_run_has_lanes():
+    run = _sim().simulate(perturb=Perturbation(
+        stragglers=(Straggler(1, 1.5),),
+        faults=(Fault(3, 4),), steps=8, save_every=4), seeds=(0, 1))
+    assert run.total_times.shape == (2,)
+    assert run.seeds == [0, 1]
+    assert float(run.total_times[0]) != float(run.total_times[1])
+    d = run.to_dict()
+    assert json.loads(json.dumps(d)) == d
+
+
+# ------------------------ address/serialization stability ------------------------
+
+def test_build_keys_carry_no_perturb_field():
+    """Perturbations multiply profiled means at run-evaluation time;
+    builds and store addresses must not know they exist."""
+    sim = _sim()
+    key = (sim.cfg, sim.strategy.stripped()
+           if hasattr(sim.strategy, "stripped") else sim.strategy,
+           2, 512)
+    assert "perturb" not in build_key_json(key)
+
+
+def test_serve_query_serialization_unchanged_when_clean():
+    q = ServeQuery("gpt2_345m", Strategy(mp=1, pp=2, dp=2,
+                                         microbatches=4))
+    d = q.to_dict()
+    assert "perturb" not in d                    # pre-perturb bytes
+    assert ServeQuery.from_dict(d) == q
+    p = Perturbation(stragglers=(Straggler(1, 1.5), Straggler(3, 1.5)))
+    qp = dataclasses.replace(q, perturb=p)
+    dp = qp.to_dict()
+    assert dp["perturb"] == p.to_dict()
+    assert ServeQuery.from_dict(json.loads(json.dumps(dp))) == qp
+
+
+def test_serve_answers_perturbed_queries(tmp_path):
+    server = DistSim.serve(str(tmp_path))
+    q = ServeQuery("gpt2_345m", Strategy(mp=1, pp=2, dp=2,
+                                         microbatches=4))
+    p = Perturbation(stragglers=(Straggler(1, 1.5), Straggler(3, 1.5)))
+    clean, slow = server.answer_batch(
+        [q, dataclasses.replace(q, perturb=p)])
+    assert slow.batch_time > clean.batch_time
+    # the clean lane is byte-identical to the engine's predict on the
+    # served cluster (DistSim's default cluster differs from serve's)
+    sim = _sim(provider=AnalyticalProvider(A40_CLUSTER))
+    assert clean.batch_time == float(sim.simulate().batch
+                                     .batch_times[0])
+    assert slow.batch_time == sim.engine().run(perturb=p).batch_time
+
+
+# ------------------------ goldens ------------------------
+
+def test_degraded_matrix_matches_goldens():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    report = run_degraded(degraded_matrix())
+    assert report.passed, [c.violations for c in report.failures]
+    current = json.loads(json.dumps(report.to_dict(), sort_keys=True))
+    assert current == golden, \
+        "degraded matrix drifted; rerun benchmarks/bench_fault.py " \
+        "--update-goldens if intentional"

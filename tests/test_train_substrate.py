@@ -1,11 +1,17 @@
 """Optimizer, checkpoint, data pipeline, fault tolerance, compression."""
 import os
+import subprocess
+import sys
 import tempfile
 
 import pytest
 
-hp = pytest.importorskip("hypothesis")
-st = pytest.importorskip("hypothesis.strategies")
+try:
+    import hypothesis as hp
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dependency; spot-checks still run
+    HAVE_HYPOTHESIS = False
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +22,8 @@ from repro.train import checkpoint as ckpt
 from repro.train import optimizer as opt
 from repro.train.compression import (ErrorFeedback, compressed_psum,
                                      dequantize_int8, quantize_int8)
-from repro.train.fault_tolerance import (HeartbeatMonitor, replan_mesh,
-                                         run_with_recovery)
+from repro.train.fault_tolerance import (ElasticPlan, HeartbeatMonitor,
+                                         replan_mesh, run_with_recovery)
 
 
 # ---------------------------- optimizer ----------------------------
@@ -78,11 +84,32 @@ def test_checkpoint_retention_and_latest():
         assert ckpt.latest_step(d) == 5
 
 
+def test_checkpoint_keep_zero_retains_nothing():
+    """Regression: ``steps[:-0]`` is the empty slice, so keep=0 used to
+    silently retain EVERY checkpoint — the opposite of its meaning."""
+    tree = _tree(jax.random.PRNGKey(3))
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3):
+            ckpt.save(d, s, tree, keep=0)
+        assert ckpt.all_steps(d) == []
+        with pytest.raises(ValueError):
+            ckpt.save(d, 4, tree, keep=-1)
+
+
 def test_checkpoint_shape_mismatch_fails_loudly():
     with tempfile.TemporaryDirectory() as d:
         ckpt.save(d, 1, {"a": jnp.zeros((2, 2))})
         with pytest.raises(ValueError):
             ckpt.restore(d, {"a": jnp.zeros((3, 3))})
+
+
+def test_checkpoint_dtype_mismatch_fails_loudly():
+    """Regression: restore used to silently astype, hiding config drift
+    (e.g. fp32 optimizer moments quietly rounded into a bf16 slot)."""
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"a": jnp.zeros((2, 2), dtype=jnp.float32)})
+        with pytest.raises(ValueError, match="dtype mismatch"):
+            ckpt.restore(d, {"a": jnp.zeros((2, 2), dtype=jnp.int32)})
 
 
 def test_checkpoint_atomicity_tmp_never_latest():
@@ -92,6 +119,28 @@ def test_checkpoint_atomicity_tmp_never_latest():
         ckpt.save(d, 1, tree)
         os.makedirs(os.path.join(d, "step_00000002.tmp"))
         assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_manifest_helpers_are_numpy_only():
+    """The manifest helpers feed engine-side restore sizing
+    (``repro.core.perturb``); importing the module must not drag jax
+    in — checked in a fresh interpreter so this process's imports
+    can't mask it."""
+    m = ckpt.synthetic_manifest(4, {"pos0/params": 1000.0,
+                                    "pos1/params": 24.0})
+    assert m["step"] == 4
+    assert [e["shape"] for e in m["leaves"]] == [[250], [6]]
+    assert ckpt.manifest_nbytes(m) == 250 * 4 + 6 * 4
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    code = ("import sys\n"
+            "import repro.train.checkpoint as c\n"
+            "m = c.synthetic_manifest(0, {'pos0/params': 64.0})\n"
+            "assert c.manifest_nbytes(m) == 64.0\n"
+            "assert 'jax' not in sys.modules, 'checkpoint imported jax'\n")
+    out = subprocess.run([sys.executable, "-c", code], text=True,
+                         capture_output=True,
+                         env={**os.environ, "PYTHONPATH": src})
+    assert out.returncode == 0, out.stderr
 
 
 # ---------------------------- data ----------------------------
@@ -136,22 +185,71 @@ def test_straggler_detection():
     assert mon.stragglers() == [2]
 
 
-def test_dead_worker_detection():
+def test_dead_worker_detection_is_pure_query():
+    """Regression: ``dead()`` used to flip ``alive`` as a side effect,
+    so a second poller (or a repeated poll) saw an empty dead set and
+    never triggered recovery. Detection and transition are now split."""
     mon = HeartbeatMonitor(3, dead_after_s=10)
     for w in range(3):
         mon.heartbeat(w, 1.0, now=0.0)
     mon.heartbeat(0, 1.0, now=20.0)
     mon.heartbeat(1, 1.0, now=20.0)
     assert mon.dead(now=25.0) == [2]
+    assert mon.dead(now=25.0) == [2]            # still visible
+    assert mon.alive_count() == 3               # no mutation yet
+    assert mon.mark_dead(now=25.0) == [2]
     assert mon.alive_count() == 2
+    assert mon.dead(now=25.0) == []             # transitioned
+    assert mon.mark_dead([2]) == []             # already dead: no-op
 
 
-@hp.given(survivors=st.integers(1, 512), mp=st.sampled_from([1, 2, 4, 8, 16]))
-@hp.settings(max_examples=50, deadline=None)
-def test_replan_mesh_feasible(survivors, mp):
+def test_dead_worker_rejoins_on_heartbeat():
+    """Elastic rescheduling brings a node back: its heartbeat re-joins
+    it and drops the stale step-time history (so the revived worker is
+    not instantly flagged a straggler on pre-death data)."""
+    mon = HeartbeatMonitor(2, dead_after_s=10)
+    mon.heartbeat(0, 1.0, now=0.0)
+    mon.heartbeat(1, 9.0, now=0.0)
+    mon.mark_dead(now=20.0)
+    assert mon.alive_count() == 0
+    mon.heartbeat(1, 1.0, now=21.0)
+    assert mon.alive_count() == 1
+    assert mon.workers[1].step_times == [1.0]   # stale history dropped
+
+
+def test_replan_mesh_boundaries():
+    with pytest.raises(ValueError):
+        replan_mesh(0, 4)
+    with pytest.raises(ValueError):
+        replan_mesh(-3, 1)
+    assert replan_mesh(1, 1) == ElasticPlan(data=1, model=1)
+    # survivors < model group: mp halves until it fits
+    assert replan_mesh(3, 8) == ElasticPlan(data=1, model=2)
+    assert replan_mesh(1, 8) == ElasticPlan(data=1, model=1)
+    # model group kept intact when it fits; data is power-of-two
+    assert replan_mesh(7, 4) == ElasticPlan(data=1, model=4)
+    assert replan_mesh(8, 4) == ElasticPlan(data=2, model=4)
+    assert replan_mesh(513, 4) == ElasticPlan(data=128, model=4)
+
+
+if HAVE_HYPOTHESIS:
+    @hp.given(survivors=st.integers(1, 512),
+              mp=st.sampled_from([1, 2, 4, 8, 16]))
+    @hp.settings(max_examples=50, deadline=None)
+    def test_replan_mesh_feasible(survivors, mp):
+        plan = replan_mesh(survivors, mp)
+        assert plan.devices <= survivors
+        assert plan.devices >= max(1, survivors // 4)   # wastes <75%
+        assert plan.model <= mp
+
+
+@pytest.mark.parametrize("survivors,mp", [
+    (1, 1), (3, 2), (5, 4), (9, 8), (31, 16), (512, 16),
+])
+def test_replan_mesh_spot_checks(survivors, mp):
     plan = replan_mesh(survivors, mp)
     assert plan.devices <= survivors
-    assert plan.devices >= max(1, survivors // 4)   # wastes <75%
+    assert plan.devices >= max(1, survivors // 4)
     assert plan.model <= mp
 
 
@@ -177,15 +275,44 @@ def test_run_with_recovery_loses_bounded_steps():
     assert done.count(19) == 1 and done.count(20) == 2
 
 
+def test_run_with_recovery_budget_stops_persistent_failure():
+    """Regression: a step that deterministically raises used to loop
+    forever (restore rewinds to the same step, which fails again).
+    The recovery budget re-raises with the original failure chained."""
+    attempts = []
+
+    def step_fn(s):
+        if s == 3:
+            attempts.append(s)
+            raise RuntimeError("bad node")
+
+    with pytest.raises(RuntimeError, match="recovery budget") as ei:
+        run_with_recovery(10, step_fn, lambda s: None, lambda: 0,
+                          save_every=100, max_recoveries=4)
+    assert len(attempts) == 5                   # initial try + 4 retries
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert "bad node" in str(ei.value.__cause__)
+
+
 # ---------------------------- compression ----------------------------
 
-@hp.given(seed=st.integers(0, 10))
-@hp.settings(max_examples=10, deadline=None)
-def test_quantize_error_bound(seed):
+def _quantize_error_bound(seed):
     x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 3.0
     q, scale = quantize_int8(x)
     err = jnp.abs(dequantize_int8(q, scale) - x)
     assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+if HAVE_HYPOTHESIS:
+    @hp.given(seed=st.integers(0, 10))
+    @hp.settings(max_examples=10, deadline=None)
+    def test_quantize_error_bound(seed):
+        _quantize_error_bound(seed)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_quantize_error_bound_spot_checks(seed):
+    _quantize_error_bound(seed)
 
 
 def test_error_feedback_unbiased_over_time():
