@@ -1,0 +1,26 @@
+"""Static analysis over DistSim's event-graph IR and sources.
+
+Two passes (see ``python -m repro.analyze --help``):
+
+* :mod:`repro.analyze.graph` — structural verifier over
+  ``EngineBuild``/task graphs and compiled ``MegaBatch`` programs,
+  wired into construction behind the ``verify=`` flag /
+  ``REPRO_VERIFY`` env var.
+* :mod:`repro.analyze.lint` — AST rules for the repo's own written
+  contracts (display-only ``Event.name``, cache-key completeness,
+  deterministic iteration and RNG in build paths).
+"""
+from repro.analyze.findings import (Finding, GraphInvariantError,
+                                    VERIFY_ENV, default_verify,
+                                    raise_on_findings)
+from repro.analyze.graph import (verify_build, verify_cell_memory,
+                                 verify_engine, verify_megabatch,
+                                 verify_perturbation)
+from repro.analyze.lint import lint_file, lint_paths, lint_source
+
+__all__ = [
+    "Finding", "GraphInvariantError", "VERIFY_ENV", "default_verify",
+    "raise_on_findings", "verify_build", "verify_cell_memory",
+    "verify_engine", "verify_megabatch", "verify_perturbation",
+    "lint_file", "lint_paths", "lint_source",
+]

@@ -1,0 +1,123 @@
+"""CLI for the static analyzers.
+
+``python -m repro.analyze graph [--smoke|--full]``
+    Build every in-tree matrix cell (train + serving + degraded) on
+    the analytical provider and run the full graph verifier over each
+    engine, each perturbation, one compiled mega-batch over all
+    engines, and the static HBM-capacity check per cell. Exit 1 on any
+    finding. Pure numpy — safe for the no-jax CI image.
+
+``python -m repro.analyze lint <paths...>``
+    Run the AST contract linter over files/directories. Exit 1 on any
+    finding.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from repro.analyze.findings import VERIFY_ENV, Finding
+
+
+def _cmd_graph(args: argparse.Namespace) -> int:
+    # constructions below are verified explicitly so ALL findings are
+    # collected; disable the raising construction-time hook.
+    os.environ[VERIFY_ENV] = "0"
+    from repro.analyze.graph import (verify_cell_memory, verify_engine,
+                                     verify_megabatch,
+                                     verify_perturbation)
+    from repro.core.costmodel import get_cluster
+    from repro.core.megabatch import MegaBatch
+    from repro.core.profiler import AnalyticalProvider
+    from repro.core.scenario import TRAIN
+    from repro.validate.build_cache import BuildCache
+    from repro.validate.degraded import degraded_matrix
+    from repro.validate.sweep import (full_matrix, serving_matrix,
+                                      smoke_matrix)
+
+    cluster = get_cluster(args.cluster)
+    provider = AnalyticalProvider(cluster)
+    cache = BuildCache(provider)
+    cells = smoke_matrix() + serving_matrix()
+    if args.full:
+        cells += full_matrix()
+
+    findings: List[Finding] = []
+    engines = []
+    n_checked = 0
+    for cell in cells:
+        scenario = getattr(cell, "scenario", TRAIN)
+        eng = cache.engine_for(cell)
+        engines.append(eng)
+        fs = verify_engine(eng)
+        micro = scenario.microbatch_size(cell.strategy, cell.global_batch)
+        fs += verify_cell_memory(
+            cell.config(), cell.strategy, micro, cell.seq,
+            cluster.chip.hbm_bytes, scenario=scenario)
+        findings += [Finding(f.rule, f.message,
+                             f"{cell.label()} | {f.where}")
+                     for f in fs]
+        n_checked += 1
+
+    for dcell in degraded_matrix():
+        eng = cache.engine_for(dcell)
+        fs = verify_engine(eng)
+        fs += verify_perturbation(dcell.perturb, dcell.strategy)
+        findings += [Finding(f.rule, f.message,
+                             f"{dcell.label()} | {f.where}")
+                     for f in fs]
+        n_checked += 1
+
+    mb = MegaBatch(engines)
+    mb_findings = verify_megabatch(mb)
+    findings += mb_findings
+    print(f"repro.analyze graph: {n_checked} cells + 1 mega-batch "
+          f"program (K={mb.K}, T={mb.T}) on {cluster.name}")
+    return _report(findings)
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from repro.analyze.lint import lint_paths
+    findings = lint_paths(args.paths)
+    print(f"repro.analyze lint: {', '.join(args.paths)}")
+    return _report(findings)
+
+
+def _report(findings: List[Finding]) -> int:
+    for f in findings:
+        print(f"  {f}")
+    if findings:
+        print(f"FAIL: {len(findings)} finding(s)")
+        return 1
+    print("PASS: 0 findings")
+    return 0
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description="DistSim static analysis (graph verifier + linter)")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    g = sub.add_parser("graph", help="verify the in-tree matrices' "
+                                     "event graphs")
+    g.add_argument("--smoke", action="store_true",
+                   help="smoke + serving + degraded matrices (default)")
+    g.add_argument("--full", action="store_true",
+                   help="additionally sweep the nightly full_matrix()")
+    g.add_argument("--cluster", default="a40-cluster",
+                   help="cluster registry name (default: a40-cluster)")
+    g.set_defaults(fn=_cmd_graph)
+
+    lt = sub.add_parser("lint", help="AST contract linter")
+    lt.add_argument("paths", nargs="+", help="files or directories")
+    lt.set_defaults(fn=_cmd_lint)
+
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

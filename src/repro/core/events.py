@@ -13,7 +13,7 @@ from the paper plus our beyond-paper axes (ZeRO-1, EP).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core.modelgraph import (GEMM, LayerSpec, build_decode_graph,
@@ -146,8 +146,8 @@ def layer_composed_events(spec: LayerSpec, mp: int, devices_per_island: int,
 class Stage:
     index: int
     layers: List[LayerSpec]         # flattened (one entry per actual layer)
-    fwd: ComposedEvent = None
-    bwd: ComposedEvent = None
+    fwd: Optional[ComposedEvent] = None
+    bwd: Optional[ComposedEvent] = None
     # decode: payload the LAST stage feeds back to stage 0 between
     # autoregressive steps (sampled token ids). 0.0 for train/prefill.
     # A class-level default so stages unpickled from pre-scenario
@@ -165,7 +165,8 @@ class Stage:
 
 def flatten_layers(cfg: ArchConfig, microbatch: int, seq: int,
                    scenario: Scenario = TRAIN,
-                   layers: List[LayerSpec] = None) -> List[LayerSpec]:
+                   layers: Optional[List[LayerSpec]] = None
+                   ) -> List[LayerSpec]:
     """Flatten the model into one entry per actual layer.
 
     ``scenario`` selects the layer graph (train/prefill share the full-

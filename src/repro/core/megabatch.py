@@ -84,7 +84,8 @@ class MegaBatch:
     program pads every candidate to the longest task count.
     """
 
-    def __init__(self, engines: Sequence[EventFlowEngine], perturb=None):
+    def __init__(self, engines: Sequence[EventFlowEngine], perturb=None,
+                 verify=None):
         engines = list(engines)
         self.engines = engines
         # a Perturbation's straggler multipliers scale the profiled
@@ -139,6 +140,15 @@ class MegaBatch:
         base = 1
         for k, eng in enumerate(engines):
             base = self._compile_one(k, eng, base, trash)
+
+        # construction-time static verification of the compiled array
+        # program (repro.analyze): verify=None defers to REPRO_VERIFY —
+        # on in tests/CI, off on the search hot path.
+        from repro.analyze.findings import default_verify
+        if default_verify(verify):
+            from repro.analyze.findings import raise_on_findings
+            from repro.analyze.graph import verify_megabatch
+            raise_on_findings(verify_megabatch(self))
 
     # ------------------------------------------------------------------
 

@@ -4,9 +4,12 @@ from __future__ import annotations
 
 import dataclasses
 import typing
+from typing import Any, Dict, Type, TypeVar
+
+T = TypeVar("T")
 
 
-def _field_types(cls) -> dict:
+def _field_types(cls: type) -> Dict[str, Any]:
     """Resolved (non-string) field annotations — dataclass modules use
     ``from __future__ import annotations``, so raw annotations are
     strings until resolved against the defining module's globals."""
@@ -16,7 +19,7 @@ def _field_types(cls) -> dict:
         return {}
 
 
-def dataclass_from_dict(cls, d: dict):
+def dataclass_from_dict(cls: Type[T], d: dict) -> T:
     """Construct ``cls`` from a dict, ignoring unknown keys — the one
     place that defines how report dicts rehydrate, so schema-migration
     behavior changes in exactly one spot.
@@ -26,7 +29,7 @@ def dataclass_from_dict(cls, d: dict):
     matching what ``dataclasses.asdict`` lowers on the way out."""
     fields = {f.name for f in dataclasses.fields(cls)}
     hints = _field_types(cls)
-    out = {}
+    out: Dict[str, Any] = {}
     for k, v in d.items():
         if k not in fields:
             continue

@@ -263,8 +263,11 @@ def activity_duration_error(pred: Timeline, actual: Timeline
 
 def _util_delta(pu: Dict[int, float], au: Dict[int, float]
                 ) -> Dict[int, float]:
+    # sorted: the union's hash order must not leak into the result's
+    # key order (repro.analyze lint rule L003); downstream consumers
+    # reduce with max/mean, but dict order reaches reports via .items()
     return {d: abs(pu.get(d, 0.0) - au.get(d, 0.0))
-            for d in set(pu) | set(au)}
+            for d in sorted(set(pu) | set(au))}
 
 
 def utilization_delta(pred: Timeline, actual: Timeline) -> Dict[int, float]:

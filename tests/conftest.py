@@ -5,6 +5,12 @@ import os
 assert "xla_force_host_platform_device_count" not in \
     os.environ.get("XLA_FLAGS", "")
 
+# construction-time static graph verification (repro.analyze) is ON
+# for the whole suite: every engine/mega-batch any test builds gets
+# the invariant check for free. Hot paths (benchmarks, search) leave
+# the variable unset and pay nothing.
+os.environ.setdefault("REPRO_VERIFY", "1")
+
 import jax
 
 jax.config.update("jax_platform_name", "cpu")

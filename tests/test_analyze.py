@@ -1,0 +1,375 @@
+"""repro.analyze: mutation suite + clean-run assertions.
+
+Each test seeds exactly one defect class from the rule tables in
+:mod:`repro.analyze.graph` (G001..G010) / :mod:`repro.analyze.lint`
+(L001..L004) and asserts the INTENDED rule fires — not merely "some
+finding appears". The clean-run half asserts zero findings over every
+in-tree smoke-matrix cell (train + serving + degraded), the compiled
+mega-batch program, and the real source tree: the verifier earns its
+keep only if it is silent on healthy graphs.
+"""
+import dataclasses
+import inspect
+
+import pytest
+
+from repro.analyze import (GraphInvariantError, default_verify,
+                           lint_paths, lint_source, raise_on_findings,
+                           verify_build, verify_cell_memory,
+                           verify_engine, verify_megabatch,
+                           verify_perturbation)
+from repro.analyze.findings import Finding
+from repro.configs.base import get_config
+from repro.core import (A40_CLUSTER, AnalyticalProvider, DistSim, Fault,
+                        MegaBatch, Perturbation, Strategy)
+from repro.validate import (BuildCache, degraded_matrix, serving_matrix,
+                            smoke_matrix)
+
+CFG = get_config("gpt2_345m")
+PROVIDER = AnalyticalProvider(A40_CLUSTER)
+
+
+def _engine(mp=1, pp=2, dp=1, m=4, schedule="1f1b"):
+    """A small engine built with verification OFF so tests can mutate
+    it into each defect class before calling the verifier."""
+    strat = Strategy(mp=mp, pp=pp, dp=dp, microbatches=m,
+                     schedule=schedule)
+    sim = DistSim(CFG, strat, dp * m, 128, PROVIDER)
+    from repro.core.engine import EventFlowEngine
+    return EventFlowEngine(sim.positions(), strat, PROVIDER,
+                           verify=False)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------------------
+# graph verifier: seeded defects
+# --------------------------------------------------------------------------
+
+def test_clean_engine_has_no_findings():
+    assert verify_engine(_engine()) == []
+
+
+def test_g001_dependency_cycle():
+    """Reversing one device's task list makes its head task wait on an
+    arrival its own later tasks produce — a cycle through the device-
+    serialization chain. Exactly G001 fires; topo_order() is never
+    consulted on a cyclic graph (it deadlocks by design, G004 stays
+    quiet)."""
+    eng = _engine()
+    for lst in (eng.task_isf, eng.task_pos, eng.task_micro,
+                eng.task_name, eng.task_p2p_name):
+        lst[1] = lst[1][::-1]
+    eng._topo = None
+    assert _rules(verify_engine(eng)) == {"G001"}
+
+
+def test_g002_dangling_dependency():
+    """Retag one F task to a microbatch that doesn't exist: its B
+    consumer now depends on a producer no task provides (G002), and
+    coverage reports the original slot missing (G003)."""
+    eng = _engine()
+    d = 1
+    idx = next(i for i, isf in enumerate(eng.task_isf[d]) if isf)
+    eng.task_micro[d] = list(eng.task_micro[d])
+    eng.task_micro[d][idx] = eng.m + 5
+    eng._topo = None
+    rules = _rules(verify_engine(eng))
+    assert "G002" in rules
+    assert "G003" in rules            # the (F, pos, mic) slot went missing
+
+
+def test_g003_duplicate_and_misplaced_task():
+    eng = _engine()
+    d = 0
+    # duplicate: copy device 1's first task onto device 0 — same
+    # (phase, pos, mic) key now has two producers, and the copy sits on
+    # a device its position does not map to
+    eng.task_isf[d] = list(eng.task_isf[d]) + [eng.task_isf[1][0]]
+    eng.task_pos[d] = list(eng.task_pos[d]) + [eng.task_pos[1][0]]
+    eng.task_micro[d] = list(eng.task_micro[d]) + [eng.task_micro[1][0]]
+    eng.task_name[d] = list(eng.task_name[d]) + [eng.task_name[1][0]]
+    eng.task_p2p_name[d] = list(eng.task_p2p_name[d]) \
+        + [eng.task_p2p_name[1][0]]
+    eng._topo = None
+    assert "G003" in _rules(verify_engine(eng))
+
+
+def test_g004_stale_topo_order():
+    """A topo_order() that disagrees with the true edges (here: served
+    stale after a task-list edit) is the MegaBatch compile contract
+    breaking — G004."""
+    eng = _engine()
+    eng._topo = list(reversed(eng.topo_order()))
+    assert "G004" in _rules(verify_engine(eng))
+
+
+def test_g006_metadata_misalignment():
+    eng = _engine()
+    eng.task_name[0] = list(eng.task_name[0])[:-1]    # drop one entry
+    assert _rules(verify_engine(eng)) == {"G006"}
+
+
+def test_g009_non_finite_event_mean():
+    eng = _engine()
+    eng.build.fwd_event_means[0] = [float("nan")] \
+        + list(eng.build.fwd_event_means[0][1:])
+    assert "G009" in _rules(verify_engine(eng))
+    # a bare build (no schedule) gets the same means check
+    assert "G009" in _rules(verify_build(eng.build))
+
+
+# --------------------------------------------------------------------------
+# megabatch program: seeded defects
+# --------------------------------------------------------------------------
+
+def _megabatch():
+    cache = BuildCache(PROVIDER)
+    engines = [cache.engine_for(c) for c in smoke_matrix()[:3]]
+    return MegaBatch(engines, verify=False)
+
+
+def test_clean_megabatch_has_no_findings():
+    assert verify_megabatch(_megabatch()) == []
+
+
+def test_g005_write_before_read():
+    """The >3-deps defect class: an extra (unhonorable) dependency
+    compiles into a dep plane reading a slot written at a LATER step of
+    the same candidate. G005 catches it as write-before-read."""
+    mb = _megabatch()
+    k = 1
+    n = mb.engines[k].total_tasks
+    # point step 0's dep1 at the slot written by this candidate's LAST
+    # step — a forward reference no schedule can honor
+    mb._dep1[0, k] = mb._out[n - 1, k]
+    assert "G005" in _rules(verify_megabatch(mb))
+
+
+def test_g005_foreign_candidate_read():
+    mb = _megabatch()
+    mb._dep2[0, 0] = mb._out[0, 1]     # candidate 0 reads candidate 1
+    assert "G005" in _rules(verify_megabatch(mb))
+
+
+def test_g006_broken_serialization_chain():
+    mb = _megabatch()
+    k = 0
+    n = mb.engines[k].total_tasks
+    # retarget a mid-chain dep0 to the dummy slot: the chain breaks and
+    # an extra chain head appears
+    mb._dep0[n // 2, k] = 0
+    assert "G006" in _rules(verify_megabatch(mb))
+
+
+def test_g005_negative_duration():
+    mb = _megabatch()
+    mb._dur[0, 0] = -1.0
+    assert "G005" in _rules(verify_megabatch(mb))
+
+
+# --------------------------------------------------------------------------
+# perturbation + memory: seeded defects
+# --------------------------------------------------------------------------
+
+def test_g008_fault_rank_outside_mesh():
+    strat = Strategy(mp=1, pp=2, dp=2, microbatches=4)
+    p = Perturbation(faults=(Fault(rank=99, at_step=1),), steps=8)
+    assert "G008" in _rules(verify_perturbation(p, strat))
+
+
+def test_g008_unrecoverable_fault():
+    """world = mp*pp = 4 with dp=1: losing any rank leaves 3 survivors,
+    which cannot hold the 4-wide model group — replan must fail."""
+    strat = Strategy(mp=2, pp=2, dp=1, microbatches=4)
+    p = Perturbation(faults=(Fault(rank=1, at_step=1),), steps=8)
+    assert "G008" in _rules(verify_perturbation(p, strat))
+
+
+def test_g008_clean_survivable_fault():
+    strat = Strategy(mp=1, pp=2, dp=2, microbatches=4)
+    p = Perturbation(faults=(Fault(rank=3, at_step=2),), steps=8)
+    assert verify_perturbation(p, strat) == []
+
+
+def test_g010_over_capacity_strategy():
+    """An unsharded 145B model cannot fit a single 48 GB chip."""
+    cfg = get_config("gpt_145b")
+    strat = Strategy(mp=1, pp=1, dp=1, microbatches=1)
+    fs = verify_cell_memory(cfg, strat, 4, 2048,
+                            A40_CLUSTER.chip.hbm_bytes)
+    assert _rules(fs) == {"G010"}
+
+
+def test_g010_clean_fitting_strategy():
+    strat = Strategy(mp=2, pp=2, dp=1, microbatches=4)
+    assert verify_cell_memory(CFG, strat, 1, 128,
+                              A40_CLUSTER.chip.hbm_bytes) == []
+
+
+# --------------------------------------------------------------------------
+# construction-time wiring (verify= flag / REPRO_VERIFY)
+# --------------------------------------------------------------------------
+
+def test_verify_flag_raises_at_construction(monkeypatch):
+    """With verify on, a corrupted build fails AT CONSTRUCTION with all
+    findings in the error — not later as a silent mis-simulation."""
+    eng = _engine()
+    eng.build.p2p_base = float("inf")
+    from repro.core.engine import EventFlowEngine
+    with pytest.raises(GraphInvariantError, match="G009"):
+        EventFlowEngine(eng.stages, eng.strat, PROVIDER,
+                        build=eng.build, verify=True)
+    # verify=False skips the check even with the env var set
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    EventFlowEngine(eng.stages, eng.strat, PROVIDER, build=eng.build,
+                    verify=False)
+
+
+def test_default_verify_env_semantics(monkeypatch):
+    monkeypatch.delenv("REPRO_VERIFY", raising=False)
+    assert default_verify(None) is False
+    assert default_verify(True) is True
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    assert default_verify(None) is True
+    assert default_verify(False) is False
+    monkeypatch.setenv("REPRO_VERIFY", "0")
+    assert default_verify(None) is False
+
+
+def test_raise_on_findings_severity():
+    raise_on_findings([])                                    # no-op
+    raise_on_findings([Finding(rule="GXXX", message="note",
+                               severity="warning")])         # warnings pass
+    with pytest.raises(GraphInvariantError):
+        raise_on_findings([Finding(rule="GXXX", message="boom")])
+
+
+# --------------------------------------------------------------------------
+# source linter: seeded defects
+# --------------------------------------------------------------------------
+
+def test_l001_event_name_comparison():
+    src = "def f(e):\n    if e.name == 'fwd':\n        return 1\n"
+    assert _rules(lint_source(src, "src/repro/x.py")) == {"L001"}
+    src2 = "def f(ev):\n    return ev.name.startswith('p2p')\n"
+    assert _rules(lint_source(src2, "src/repro/x.py")) == {"L001"}
+
+
+def test_l002_dropped_cache_key_field():
+    """A frozen spec dataclass whose hand-written to_dict() omits a
+    compared field: the serde key path no longer reaches it, so two
+    distinct specs collide in the cache. L002."""
+    src = (
+        "import dataclasses\n"
+        "@dataclasses.dataclass(frozen=True)\n"
+        "class Spec:\n"
+        "    mp: int = 1\n"
+        "    pp: int = 1\n"
+        "    zero1: bool = False\n"
+        "    def to_dict(self):\n"
+        "        return {'mp': self.mp, 'pp': self.pp}\n"
+    )
+    assert _rules(lint_source(src, "src/repro/x.py")) == {"L002"}
+    # asdict-based to_dict reaches every field by construction
+    fixed = src.replace("return {'mp': self.mp, 'pp': self.pp}",
+                        "return dataclasses.asdict(self)")
+    assert lint_source(fixed, "src/repro/x.py") == []
+
+
+def test_l003_set_order_leak():
+    """The exact pre-fix timeline.py pattern: iterating a set union
+    into an ordered dict construction."""
+    src = ("def f(pu, au):\n"
+           "    return {d: pu.get(d, 0.0) - au.get(d, 0.0)\n"
+           "            for d in set(pu) | set(au)}\n")
+    assert _rules(lint_source(src, "src/repro/core/fake.py")) == {"L003"}
+    fixed = src.replace("set(pu) | set(au)}",
+                        "sorted(set(pu) | set(au))}")
+    assert lint_source(fixed, "src/repro/core/fake.py") == []
+
+
+def test_l003_scoped_to_core_and_store():
+    src = "def f(s):\n    return tuple(x for x in s)\n"
+    bad = "def f(s):\n    return tuple(x for x in set(s))\n"
+    assert lint_source(bad, "src/repro/search/x.py") == []   # out of scope
+    assert _rules(lint_source(bad, "src/repro/store/x.py")) == {"L003"}
+    assert lint_source(src, "src/repro/store/x.py") == []
+
+
+def test_l004_wallclock_and_unseeded_rng():
+    src = "import time\ndef f():\n    return time.time()\n"
+    assert _rules(lint_source(src, "src/repro/core/x.py")) == {"L004"}
+    rng = "import numpy as np\ndef f():\n    return np.random.randn(3)\n"
+    assert _rules(lint_source(rng, "src/repro/store/x.py")) == {"L004"}
+    # profiler.py measures wall-clock by design — exempt
+    assert lint_source(src, "src/repro/core/profiler.py") == []
+    # seeded draws pass
+    ok = ("import numpy as np\ndef f(seed):\n"
+          "    return np.random.RandomState(seed).randn(3)\n")
+    assert lint_source(ok, "src/repro/core/x.py") == []
+
+
+def test_l000_syntax_error():
+    assert _rules(lint_source("def f(:\n", "x.py")) == {"L000"}
+
+
+# --------------------------------------------------------------------------
+# clean runs: zero false positives over the real tree + smoke matrices
+# --------------------------------------------------------------------------
+
+def test_lint_clean_over_source_tree():
+    assert lint_paths(["src/repro"]) == []
+
+
+def test_timeline_util_delta_sorted_regression():
+    """Satellite fix: _util_delta's key order is sorted, not set-hash
+    order — and the module lints clean under L003."""
+    from repro.core import timeline as tl
+    assert lint_paths(["src/repro/core/timeline.py"]) == []
+    src = inspect.getsource(tl._util_delta)
+    assert "sorted" in src
+    out = tl._util_delta({3: 0.5, 1: 0.25}, {2: 0.125})
+    assert list(out) == [1, 2, 3]
+
+
+_CACHE = BuildCache(PROVIDER)       # shared across matrix cells
+
+
+@pytest.mark.parametrize("cell", smoke_matrix() + serving_matrix(),
+                         ids=lambda c: c.label())
+def test_clean_smoke_matrix_cell(cell):
+    eng = _CACHE.engine_for(cell)
+    assert verify_engine(eng) == []
+    micro = cell.scenario.microbatch_size(cell.strategy, cell.global_batch)
+    assert verify_cell_memory(cell.config(), cell.strategy, micro,
+                              cell.seq, A40_CLUSTER.chip.hbm_bytes,
+                              scenario=cell.scenario) == []
+
+
+@pytest.mark.parametrize("cell", degraded_matrix(), ids=lambda c: c.label())
+def test_clean_degraded_matrix_cell(cell):
+    assert verify_engine(_CACHE.engine_for(cell)) == []
+    assert verify_perturbation(cell.perturb, cell.strategy) == []
+
+
+def test_frozen_spec_dataclasses_keep_key_paths():
+    """The four spec dataclasses the cache keys ride on stay frozen and
+    expose every compared field through their serde path (the linter's
+    L002 contract, asserted directly against the live classes)."""
+    from repro.core.costmodel import ClusterSpec
+    from repro.core.events import Strategy as S
+    from repro.core.perturb import Perturbation as P
+    from repro.core.scenario import Decode
+    for cls, obj in ((S, S(mp=2, pp=2, dp=2, zero1=True)),
+                     (P, Perturbation(faults=(Fault(0, 1),), steps=4)),
+                     (Decode, Decode(steps=2, context=64))):
+        assert cls.__dataclass_params__.frozen
+        d = obj.to_dict() if hasattr(obj, "to_dict") else None
+        if isinstance(d, dict):
+            compared = {f.name for f in dataclasses.fields(cls)
+                        if f.compare}
+            assert compared <= set(d), cls
+    assert ClusterSpec.__dataclass_params__.frozen
